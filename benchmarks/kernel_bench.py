@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks: KronDPP hot-spot ops — the vec-trick Kronecker
+matvec vs a dense O(N^2) matvec (the speedup that makes KronDPP sampling and
+learning scale), and the partial-trace contraction.
+
+(Pallas kernels themselves target TPU; on this CPU host we time the XLA
+paths the ops.py wrappers dispatch to, which share the same algorithmic
+structure. interpret-mode Pallas numbers are not meaningful timings.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kron as K
+from repro.kernels import ref
+from .common import timed
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for n in (32, 64, 96):
+        N = n * n
+        A = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+        B = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+        x = jnp.asarray(rng.standard_normal((4, N)), jnp.float32)
+        L = jnp.kron(A, B)
+
+        t_dense, _ = timed(jax.jit(lambda L, x: x @ L.T), L, x, repeats=3)
+        t_kron, _ = timed(jax.jit(ref.kron_matvec_ref), A, B, x, repeats=3)
+        print(f"kernel,kron_matvec_N{N},{t_kron * 1e6:.0f},"
+              f"dense {t_dense * 1e6:.0f}us -> "
+              f"{t_dense / max(t_kron, 1e-9):.1f}x (O(N^2)->O(N^1.5))")
+
+    n1 = n2 = 24
+    theta = jnp.asarray(rng.standard_normal((n1 * n2, n1 * n2)), jnp.float32)
+    L2m = jnp.asarray(rng.standard_normal((n2, n2)), jnp.float32)
+    t4 = theta.reshape(n1, n2, n1, n2)
+    t_pt, _ = timed(jax.jit(ref.partial_trace_A_ref), t4, L2m, repeats=5)
+    print(f"kernel,partial_trace_A_N{n1 * n2},{t_pt * 1e6:.0f},"
+          f"streams Theta once (memory-bound; Pallas tile target)")
+
+
+if __name__ == "__main__":
+    main()

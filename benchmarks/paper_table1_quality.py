@@ -1,0 +1,70 @@
+"""Paper Table 1 — small-N quality: EM vs Picard vs KrK-Picard final
+log-likelihoods on registry-sized data (N=100), train and held-out test.
+
+Paper claim: KrK-Picard attains comparable, slightly worse LL than the
+full-kernel methods at tractable N (full kernels have more capacity). The
+dataset is a synthetic stand-in with the paper's Wishart initialization
+protocol (Amazon registries are not redistributable offline — DESIGN.md §7).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SubsetBatch, fit_em, fit_krk_picard, fit_picard,
+                        log_likelihood, random_krondpp)
+from repro.core.dpp import marginal_kernel
+from repro.core import kron as K
+from .common import gaussian_kernel_data
+
+
+def run(N1=10, N2=10, n_train=80, n_test=40, iters=10, seed=0):
+    N = N1 * N2
+    train = gaussian_kernel_data(N1, N2, n_train, 5, 25, seed=seed)
+    test = gaussian_kernel_data(N1, N2, n_test, 5, 25, seed=seed + 99)
+
+    # Wishart init (paper Sec. 5.2): K ~ Wishart(N, I)/N; L = K(I-K)^{-1}
+    rng = np.random.default_rng(seed)
+    G = rng.standard_normal((N, N)).astype(np.float32) / np.sqrt(N)
+    Kmat = G @ G.T
+    Kmat = Kmat / (np.linalg.eigvalsh(Kmat).max() * 1.05)  # keep K < I
+    L0 = jnp.asarray(Kmat @ np.linalg.inv(np.eye(N) - Kmat), jnp.float32)
+    L0 = 0.5 * (L0 + L0.T) + 1e-3 * jnp.eye(N)
+
+    # KrK init: nearest Kronecker factors of L0 (paper: minimize ||L - L1xL2||)
+    U, s, V = K.nearest_kron_factors(L0, N1, N2, iters=100)
+    sgn = jnp.sign(U[0, 0])
+    L1 = sgn * jnp.sqrt(s) * U + 1e-3 * jnp.eye(N1)
+    L2 = sgn * jnp.sqrt(s) * V + 1e-3 * jnp.eye(N2)
+    from repro.core import KronDPP
+    init_kron = KronDPP((L1, L2))
+
+    em = fit_em(L0, train, iters=iters, lr=1e-3)
+    pic = fit_picard(L0, train, iters=iters, a=1.3)
+    krk = fit_krk_picard(init_kron, train, iters=iters, a=1.8)
+
+    rows = []
+    for name, Lfin in (("em", em.L), ("picard", pic.L),
+                       ("krk_picard", krk.model.full_matrix())):
+        rows.append({
+            "algo": name,
+            "train_ll": float(log_likelihood(jnp.asarray(Lfin), train)),
+            "test_ll": float(log_likelihood(jnp.asarray(Lfin), test)),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(f"table1,{r['algo']},0,train {r['train_ll']:.2f} / "
+              f"test {r['test_ll']:.2f}")
+    krk = next(r for r in rows if r["algo"] == "krk_picard")
+    best = max(r["train_ll"] for r in rows if r["algo"] != "krk_picard")
+    gap = best - krk["train_ll"]
+    print(f"table1,krk_vs_full_gap,{gap:.3f},paper: KrK slightly below "
+          f"full-kernel methods at tractable N (gap {gap:.2f} nats)")
+
+
+if __name__ == "__main__":
+    main()

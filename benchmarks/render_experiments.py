@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from dryrun.json.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .roofline import NOTES, RESULTS, analyze, load
+
+MARK_DRY = ("<!-- DRYRUN:BEGIN -->", "<!-- DRYRUN:END -->")
+MARK_ROOF = ("<!-- ROOFLINE:BEGIN -->", "<!-- ROOFLINE:END -->")
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def dryrun_table(recs) -> str:
+    lines = ["| arch | shape | mesh | compile s | microbatch | HBM/dev (temp+args) GB | collective MiB/step (extrap) | top collective |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["chips"])):
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['chips']} | FAILED | | | | {r['error'][:60]} |")
+            continue
+        mesh = "x".join(str(v) for v in r["mesh"].values())
+        temp = r.get("temp_size_in_bytes", 0) / 2 ** 30
+        args = r.get("argument_size_in_bytes", 0) / 2 ** 30
+        coll = r.get("collective_bytes_extrapolated")
+        if coll is None:
+            coll = r.get("collectives", {}).get("total_bytes", 0)
+        by_op = (r.get("collectives_extrapolated") or r.get("collectives", {})) \
+            .get("bytes_by_op", {})
+        top = max(by_op.items(), key=lambda kv: kv[1])[0] if by_op else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r['compile_s']} | "
+            f"{r.get('microbatches', 1)} | {temp:.1f}+{args:.1f} | "
+            f"{coll / 2 ** 20:.0f} | {top} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | bottleneck | MODEL/HLO flops | roofline frac | what moves it |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for rec in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if rec.get("chips") != 256:
+            continue
+        row = analyze(rec)
+        if not row:
+            continue
+        lines.append(
+            f"| {row['arch']} | {row['shape']} | {row['compute_s']:.3f} | "
+            f"{row['memory_s']:.3f} | {row['collective_s']:.3f} | "
+            f"**{row['dominant']}** | {row['useful_ratio'] * 100:.0f}% | "
+            f"{row['roofline_fraction'] * 100:.1f}% | {NOTES[row['dominant']]} |")
+    return "\n".join(lines)
+
+
+def splice(text: str, marks, payload: str) -> str:
+    a, b = marks
+    if a not in text:
+        return text + f"\n{a}\n{payload}\n{b}\n"
+    pre = text.split(a)[0]
+    post = text.split(b)[1] if b in text else ""
+    return pre + a + "\n" + payload + "\n" + b + post
+
+
+def main():
+    recs = load()
+    with open(EXP) as f:
+        text = f.read()
+    text = splice(text, MARK_DRY, dryrun_table(recs))
+    text = splice(text, MARK_ROOF, roofline_table(recs))
+    with open(EXP, "w") as f:
+        f.write(text)
+    ok = sum(1 for r in recs if "error" not in r)
+    print(f"rendered {ok} records into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

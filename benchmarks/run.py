@@ -1,0 +1,28 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (kernel_bench, paper_fig1_synthetic, paper_fig1c_stochastic,
+                   paper_sec4_sampling, paper_table1_quality,
+                   paper_table2_runtime, roofline)
+
+    print("name,us_per_call,derived")
+    for mod in (paper_fig1_synthetic, paper_fig1c_stochastic,
+                paper_table1_quality, paper_table2_runtime,
+                paper_sec4_sampling, kernel_bench, roofline):
+        try:
+            mod.main()
+        except Exception as e:      # keep the harness running
+            traceback.print_exc()
+            print(f"{mod.__name__},error,0,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

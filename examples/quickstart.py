@@ -1,0 +1,32 @@
+"""Quickstart: build a KronDPP, sample from it exactly, and learn the
+factored kernel back from the samples with KrK-Picard (paper Alg. 1).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import (SubsetBatch, fit_krk_picard, random_krondpp,
+                        sample_krondpp)
+
+# 1) a ground-truth KronDPP over N = 20 x 25 = 500 items
+true = random_krondpp(jax.random.PRNGKey(7), (20, 25))
+print(f"ground set N = {true.N}, factors {true.sizes}")
+
+# 2) exact sampling — O(N1^3 + N2^3 + N k^3), never materializes L
+rng = np.random.default_rng(0)
+samples = [s for s in (sample_krondpp(rng, true) for _ in range(80)) if s]
+sizes = [len(s) for s in samples]
+print(f"drew {len(samples)} exact samples, |Y| in "
+      f"[{min(sizes)}, {max(sizes)}], mean {np.mean(sizes):.1f}")
+
+# 3) learn a fresh KronDPP from the samples (monotone ascent, Thm. 3.2)
+batch = SubsetBatch.from_lists(samples)
+init = random_krondpp(jax.random.PRNGKey(3), (20, 25))
+res = fit_krk_picard(init, batch, iters=10, a=1.0)
+lls = res.log_likelihoods
+print("log-likelihood:", " -> ".join(f"{v:.2f}" for v in lls[::3]))
+assert all(b >= a - 1e-3 for a, b in zip(lls, lls[1:])), "ascent violated!"
+print("monotone ascent verified; mean step time "
+      f"{np.mean(res.step_times) * 1e3:.1f} ms")

@@ -1,0 +1,64 @@
+"""Serve a small model with batched requests + DPP KV-cache compaction:
+after prefill, the cache is compacted to a diversity-preserving subset
+(Diversity Networks [26] applied to tokens) before decode continues.
+
+    PYTHONPATH=src python examples/serve_kv_compaction.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import LM
+from repro.models.transformer import DecodeState
+from repro.serve import ServeEngine, compact_kv_cache
+
+cfg = smoke_config("qwen2-0.5b")
+lm = LM(cfg)
+params = lm.init_params(jax.random.PRNGKey(0))
+engine = ServeEngine(lm, params, temperature=0.0)
+
+rng = np.random.default_rng(0)
+B, S = 4, 48
+prompts = rng.integers(0, cfg.vocab, (B, S), dtype=np.int32)
+
+# --- plain generation -------------------------------------------------------
+out = engine.generate(prompts, 12)
+print(f"plain decode:     tokens {out['tokens'].shape}, "
+      f"{out['decode_tok_per_s']:.0f} tok/s")
+
+# --- with KV compaction between prefill and decode --------------------------
+logits, state = jax.jit(lm.prefill)(params, jnp.asarray(prompts))
+budget = 24
+
+from repro.models.attention import KVCache
+
+caches = state.caches
+new_head = {}
+for name, c in caches["head"].items():
+    if isinstance(c, KVCache):
+        ks, vs, pos = [], [], c.pos
+        for u in range(c.k.shape[0]):
+            nc, _ = compact_kv_cache(
+                KVCache(c.k[u], c.v[u], c.pos[u]), budget, recency=8)
+            ks.append(nc.k)
+            vs.append(nc.v)
+        new_head[name] = KVCache(jnp.stack(ks), jnp.stack(vs), c.pos)
+    else:
+        new_head[name] = c
+state_c = DecodeState({"head": new_head}, state.cross, state.enc_out)
+
+tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+dec = jax.jit(lm.decode_step)
+outs = []
+for _ in range(12):
+    lg, state_c = dec(params, tok, state_c)
+    tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+    outs.append(np.asarray(tok[:, 0]))
+print(f"compacted decode: cache {S} -> {budget} slots/layer; "
+      f"generated {np.stack(outs, 1).shape} tokens")
+print("note: compaction keeps a diverse + recent token subset per kv-head "
+      "(greedy k-DPP MAP, the greedy_map Pallas kernel)")

@@ -1,0 +1,3 @@
+from .manager import CheckpointManager, CheckpointConfig
+
+__all__ = ["CheckpointManager", "CheckpointConfig"]

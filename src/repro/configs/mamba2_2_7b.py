@@ -1,0 +1,9 @@
+"""mamba2-2.7b [arXiv:2405.21060] — attention-free SSD, state=128."""
+from ..config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b", family="ssm",
+    n_layers=64, d_model=2560, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_chunk=256,
+)

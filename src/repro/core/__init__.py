@@ -1,0 +1,27 @@
+"""KronDPP core — the paper's contribution as a composable JAX module.
+
+Public API:
+    KronDPP, SubsetBatch
+    kron (algebra), sampling (exact samplers, greedy MAP)
+    krk_picard (Alg. 1), joint_picard (Alg. 3), picard ([25]), em ([10])
+    clustering (Sec. 3.3 greedy SUKP)
+"""
+
+from . import kron, dpp, sampling, clustering
+from .dpp import SubsetBatch, log_likelihood, picard_delta
+from .krondpp import KronDPP, random_krondpp
+from .krk_picard import (krk_picard_step, fit_krk_picard, accumulate_AC,
+                         AC_from_dense_theta)
+from .picard import picard_step, fit_picard
+from .joint_picard import joint_picard_step, fit_joint_picard
+from .em import fit_em
+from .sampling import sample_full_dpp, sample_krondpp, greedy_map_kdpp
+from .clustering import greedy_subset_clustering
+
+__all__ = [
+    "KronDPP", "SubsetBatch", "random_krondpp", "log_likelihood", "picard_delta",
+    "krk_picard_step", "fit_krk_picard", "accumulate_AC", "AC_from_dense_theta",
+    "picard_step", "fit_picard", "joint_picard_step", "fit_joint_picard",
+    "fit_em", "sample_full_dpp", "sample_krondpp", "greedy_map_kdpp",
+    "greedy_subset_clustering", "kron", "dpp", "sampling", "clustering",
+]

@@ -1,0 +1,106 @@
+"""Distributed KrK-Picard — the paper's learner scaled over the mesh.
+
+Parallel decomposition (beyond the paper, which is single-node MATLAB):
+  * Θ-statistics (the A and C matrices of Appendix B) are SUMS over training
+    subsets → shard the subset batch over the data axes and psum the per-
+    shard A/C (shard_map; one (N1² + N2²)-sized all-reduce per sweep).
+  * The closed-form (I+L)^{-1} contractions need only the factor
+    eigendecompositions (N1³ + N2³ flops) → replicated (off critical path).
+  * Updates are rank-N1/N2 symmetric products → done replicated after psum.
+
+This keeps per-device work at O((n/P)(κ³ + κ²·max(N1,N2))) and communication
+at O(N) per sweep — the paper's stochastic memory bound, fleet-wide.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .dpp import SubsetBatch
+from .krk_picard import _alpha_beta, _subset_AC
+
+
+def make_distributed_krk_step(mesh: Mesh, data_axes=("data",),
+                              shard_updates: bool = True,
+                              fresh_spectrum: bool = True):
+    """Returns a jitted (L1, L2, batch, a) -> (L1', L2') step.
+
+    The subset batch must be sharded over `data_axes` on dim 0 (n must divide
+    the axis size product).
+
+    Beyond-paper performance knobs (EXPERIMENTS.md §Perf P3):
+      shard_updates:  shard the O(N_i^3) update matmuls (L_i@X@L_i and the
+        P diag P^T reconstructions) over the "model" axis instead of
+        replicating them — divides their flops+bytes by the TP degree at the
+        cost of one (N_i^2)-sized all-gather each.
+      fresh_spectrum: paper-faithful recomputation of eigh(L1) after the L1
+        update, used by the L2 update. False reuses the pre-update spectrum
+        (one fewer N^{3/2} eigendecomposition per sweep); ascent is then no
+        longer guaranteed by Thm 3.2 but holds empirically (validated in
+        tests/test_distributed.py).
+    """
+    spec_b = P(data_axes)
+    spec_r = P()
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def _sh(x, col_sharded: bool):
+        if not (shard_updates and tp):
+            return x
+        spec = P(None, tp) if col_sharded else P()
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def local_AC(L1, L2, indices, mask):
+        A, C = jax.vmap(lambda i, m: _subset_AC(L1, L2, i, m))(indices, mask)
+        # mean over the GLOBAL batch: local sum / global count, then psum
+        n_local = indices.shape[0]
+        A = jax.lax.psum(A.sum(0), data_axes)
+        C = jax.lax.psum(C.sum(0), data_axes)
+        n_global = jax.lax.psum(jnp.asarray(n_local, jnp.float32), data_axes)
+        return A / n_global, C / n_global
+
+    shard_AC = jax.shard_map(
+        local_AC, mesh=mesh,
+        in_specs=(spec_r, spec_r, spec_b, spec_b),
+        out_specs=(spec_r, spec_r), check_vma=False)
+
+    def update_factor(L, X, P_, d, coef, a, N_other):
+        """L + a/N_other (L X L - P diag(coef) P^T), matmuls TP-sharded."""
+        LX = _sh(L @ _sh(X, True), True)
+        LXL = LX @ L
+        recon = _sh(P_ * coef[None, :], True) @ P_.T
+        Ln = L + (a / N_other) * (LXL - recon)
+        return 0.5 * (Ln + Ln.T)
+
+    @jax.jit
+    def step(L1, L2, batch: SubsetBatch, a: float = 1.0):
+        N1, N2 = L1.shape[0], L2.shape[0]
+        A, C0 = shard_AC(L1, L2, batch.indices, batch.mask)
+        d1, P1 = jnp.linalg.eigh(L1)
+        d2, P2 = jnp.linalg.eigh(L2)
+        alpha, _ = _alpha_beta(d1, d2)
+        L1n = update_factor(L1, A, P1, d1, d1 ** 2 * alpha, a, N2)
+
+        if fresh_spectrum:
+            _, C = shard_AC(L1n, L2, batch.indices, batch.mask)
+            d1n, _ = jnp.linalg.eigh(L1n)
+        else:
+            C = C0                       # stale-A/C and stale-spectrum variant
+            d1n = d1
+        _, beta = _alpha_beta(d1n, d2)
+        L2n = update_factor(L2, C, P2, d2, beta, a, N1)
+        return L1n, L2n
+
+    return step
+
+
+def shard_subsets(mesh: Mesh, batch: SubsetBatch, data_axes=("data",)
+                  ) -> SubsetBatch:
+    """Place a subset batch sharded over the data axes."""
+    sh = NamedSharding(mesh, P(data_axes))
+    return SubsetBatch(jax.device_put(batch.indices, sh),
+                       jax.device_put(batch.mask, sh))

@@ -1,0 +1,150 @@
+"""Full (unstructured) DPP operations — reference implementations and the
+Picard-iteration building blocks shared by all learners.
+
+A DPP over ground set {0..N-1} with L-ensemble kernel L:
+    P(Y) = det(L_Y) / det(L + I)                                   (paper Eq. 2)
+
+Training data is a batch of subsets, stored padded for jit-ability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Subset batches (padded, static-shape)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SubsetBatch:
+    """n observed subsets, padded to k_max items.
+
+    indices: (n, k_max) int32 — ground-set indices, arbitrary in padded slots.
+    mask:    (n, k_max) bool  — True for real items.
+    """
+    indices: jax.Array
+    mask: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.indices.shape[1]
+
+    def sizes(self) -> jax.Array:
+        return self.mask.sum(-1)
+
+    @staticmethod
+    def from_lists(subsets: Sequence[Sequence[int]], k_max: int | None = None
+                   ) -> "SubsetBatch":
+        k_max = k_max or max(len(s) for s in subsets)
+        n = len(subsets)
+        idx = np.zeros((n, k_max), np.int32)
+        mask = np.zeros((n, k_max), bool)
+        for i, s in enumerate(subsets):
+            s = list(s)
+            idx[i, : len(s)] = s
+            mask[i, : len(s)] = True
+        return SubsetBatch(jnp.asarray(idx), jnp.asarray(mask))
+
+    def to_lists(self) -> List[List[int]]:
+        idx = np.asarray(self.indices)
+        msk = np.asarray(self.mask)
+        return [list(idx[i][msk[i]]) for i in range(self.n)]
+
+    def tree_flatten(self):
+        return (self.indices, self.mask), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def gather_submatrix(L: jax.Array, idx: jax.Array, mask: jax.Array) -> jax.Array:
+    """L[idx, idx] with padded rows/cols replaced by identity.
+
+    det / inverse of the padded matrix then equal det / inverse of the true
+    submatrix (embedded), keeping shapes static under jit.
+    """
+    sub = L[jnp.ix_(idx, idx)]
+    m2 = jnp.outer(mask, mask)
+    eye = jnp.eye(idx.shape[0], dtype=L.dtype)
+    return jnp.where(m2, sub, eye)
+
+
+def masked_inv_and_logdet(subL: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Cholesky-based inverse and logdet of a PD (identity-padded) matrix."""
+    chol = jnp.linalg.cholesky(subL)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
+    inv = jax.scipy.linalg.cho_solve((chol, True), jnp.eye(subL.shape[0], dtype=subL.dtype))
+    return inv, logdet
+
+
+# ---------------------------------------------------------------------------
+# Log-likelihood and Picard gradient (paper Eqs. 3-5)
+# ---------------------------------------------------------------------------
+
+def log_likelihood(L: jax.Array, batch: SubsetBatch) -> jax.Array:
+    """phi(L) = (1/n) sum_i [ log det(L_{Y_i}) ] - log det(L + I)."""
+    def one(idx, mask):
+        subL = gather_submatrix(L, idx, mask)
+        _, ld = masked_inv_and_logdet(subL)
+        return ld
+
+    lds = jax.vmap(one)(batch.indices, batch.mask)
+    sign, ldLI = jnp.linalg.slogdet(L + jnp.eye(L.shape[0], dtype=L.dtype))
+    return jnp.mean(lds) - ldLI
+
+
+def theta_matrix(L: jax.Array, batch: SubsetBatch) -> jax.Array:
+    """Theta = (1/n) sum_i U_i L_{Y_i}^{-1} U_i^T (N x N, scatter-add)."""
+    N = L.shape[0]
+
+    def one(idx, mask):
+        subL = gather_submatrix(L, idx, mask)
+        inv, _ = masked_inv_and_logdet(subL)
+        inv = inv * jnp.outer(mask, mask)
+        T = jnp.zeros((N, N), L.dtype)
+        return T.at[jnp.ix_(idx, idx)].add(inv)
+
+    Ts = jax.vmap(one)(batch.indices, batch.mask)
+    return Ts.mean(0)
+
+
+def picard_delta(L: jax.Array, batch: SubsetBatch) -> jax.Array:
+    """Delta = Theta - (L + I)^{-1}  (paper Eq. 4)."""
+    N = L.shape[0]
+    eye = jnp.eye(N, dtype=L.dtype)
+    return theta_matrix(L, batch) - jnp.linalg.solve(L + eye, eye)
+
+
+# ---------------------------------------------------------------------------
+# Brute-force oracles (tests only; N <= ~12)
+# ---------------------------------------------------------------------------
+
+def enumerate_probabilities(L: np.ndarray) -> dict:
+    """Exact P(Y) for every subset, by enumeration."""
+    N = L.shape[0]
+    Z = np.linalg.det(L + np.eye(N))
+    out = {}
+    for k in range(N + 1):
+        for Y in itertools.combinations(range(N), k):
+            sub = L[np.ix_(Y, Y)]
+            out[Y] = (np.linalg.det(sub) if k else 1.0) / Z
+    return out
+
+
+def marginal_kernel(L: np.ndarray) -> np.ndarray:
+    """K = L (L + I)^{-1}."""
+    N = L.shape[0]
+    return L @ np.linalg.inv(L + np.eye(N))

@@ -1,0 +1,200 @@
+"""KrK-Picard (paper Alg. 1) — block-coordinate ascent for KronDPP learning.
+
+Updates (Sec. 3.1, with step size a):
+    L1 <- L1 + a * Tr_1((I ⊗ L2^{-1})(L Δ L)) / N2
+    L2 <- L2 + a * Tr_2((L1^{-1} ⊗ I)(L Δ L)) / N1
+
+implemented WITHOUT materializing L, Δ or LΔL (Appendix B):
+
+    Tr_1((I⊗L2^{-1})(LΔL)) = L1 A L1 - P1 D1 diag(α) D1 P1^T
+        A_{kl}   = Tr(Θ_(kl) L2)
+        α_k      = Σ_u d2_u / (1 + d1_k d2_u)
+    Tr_2((L1^{-1}⊗I)(LΔL)) = L2 C L2 - P2 diag(β) P2^T
+        C        = Σ_{ij} L1_{ij} Θ_(ij)
+        β_u      = d2_u^2 Σ_k d1_k / (1 + d1_k d2_u)
+
+Θ = (1/n) Σ_i U_i L_{Y_i}^{-1} U_i^T is never stored dense by default: A and C
+are accumulated per-subset (the Sec. 3.3 sparse-Θ route with z = κ), giving
+O(n(κ^3 + κ^2 max(N1,N2)) + N1^3 + N2^3) time and O(N + κ^2) space — the
+paper's stochastic complexity, applied batch-wide.
+
+A dense-Θ route (`use_dense_theta=True`) matches the paper's batch method and
+is the target of the `partial_trace` Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .dpp import SubsetBatch, gather_submatrix, masked_inv_and_logdet, theta_matrix
+from .krondpp import KronDPP
+from . import kron
+
+
+# ---------------------------------------------------------------------------
+# Per-subset accumulation of A and C (Appendix B, sparse-Θ specialization)
+# ---------------------------------------------------------------------------
+
+def _subset_AC(L1, L2, idx, mask):
+    """Contribution of one subset Y to A (N1xN1) and C (N2xN2).
+
+    For Y with factor indices (r_a, u_a) and M = L_Y^{-1}:
+        A[k,l] += Σ_{a,b} M[a,b] L2[u_b, u_a] [r_a=k][r_b=l]   = P^T W  P
+        C[u,v] += Σ_{a,b} M[a,b] L1[r_a, r_b] [u_a=u][u_b=v]   = Q^T W' Q
+    """
+    N1, N2 = L1.shape[0], L2.shape[0]
+    r = idx // N2
+    u = idx % N2
+    subL = L1[jnp.ix_(r, r)] * L2[jnp.ix_(u, u)]
+    m2 = jnp.outer(mask, mask)
+    eye = jnp.eye(idx.shape[0], dtype=subL.dtype)
+    subL = jnp.where(m2, subL, eye)
+    M, _ = masked_inv_and_logdet(subL)
+    M = M * m2  # zero padded slots
+
+    P = jax.nn.one_hot(r, N1, dtype=M.dtype) * mask[:, None]
+    Q = jax.nn.one_hot(u, N2, dtype=M.dtype) * mask[:, None]
+    W = M * L2[jnp.ix_(u, u)].T            # W[a,b] = M[a,b] L2[u_b, u_a]
+    Wp = M * L1[jnp.ix_(r, r)]             # symmetric L1: L1[r_a, r_b]
+    A = P.T @ W @ P
+    C = Q.T @ Wp @ Q
+    return A, C
+
+
+def accumulate_AC(L1: jax.Array, L2: jax.Array, batch: SubsetBatch
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Mean A and C over the batch (vmap + mean; shards over data axis when
+    called under shard_map — see core/distributed.py)."""
+    A, C = jax.vmap(lambda i, m: _subset_AC(L1, L2, i, m))(batch.indices, batch.mask)
+    return A.mean(0), C.mean(0)
+
+
+def AC_from_dense_theta(theta: jax.Array, L1: jax.Array, L2: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Paper's batch route: A_{kl} = Tr(Θ_(kl) L2), C = Σ_{ij} L1_{ij} Θ_(ij).
+
+    These are the contractions the `partial_trace` Pallas kernel implements.
+    """
+    N1, N2 = L1.shape[0], L2.shape[0]
+    T4 = theta.reshape(N1, N2, N1, N2)
+    A = jnp.einsum("kulv,vu->kl", T4, L2)
+    C = jnp.einsum("iujv,ij->uv", T4, L1)
+    return A, C
+
+
+# ---------------------------------------------------------------------------
+# Closed-form (I+L)^{-1} contractions via factor eigendecompositions
+# ---------------------------------------------------------------------------
+
+def _alpha_beta(d1: jax.Array, d2: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    denom = 1.0 + jnp.outer(d1, d2)            # (N1, N2)
+    alpha = (d2[None, :] / denom).sum(1)       # α_k = Σ_u d2_u/(1+d1_k d2_u)
+    beta = (d2[None, :] ** 2 * d1[:, None] / denom).sum(0)  # β_u
+    return alpha, beta
+
+
+# ---------------------------------------------------------------------------
+# One KrK-Picard step
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("use_dense_theta",))
+def krk_picard_step(L1: jax.Array, L2: jax.Array, batch: SubsetBatch,
+                    a: float = 1.0, use_dense_theta: bool = False
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One sweep of Alg. 1 (updates L1 then L2, per the block-CCCP order)."""
+    N1, N2 = L1.shape[0], L2.shape[0]
+
+    def AC(L1, L2):
+        if use_dense_theta:
+            theta = theta_matrix_kron(L1, L2, batch)
+            return AC_from_dense_theta(theta, L1, L2)
+        return accumulate_AC(L1, L2, batch)
+
+    # ---- update L1 (holding L2) ----
+    A, _ = AC(L1, L2)
+    d1, P1 = jnp.linalg.eigh(L1)
+    d2, P2 = jnp.linalg.eigh(L2)
+    alpha, _ = _alpha_beta(d1, d2)
+    L1BL1 = (P1 * (d1 ** 2 * alpha)[None, :]) @ P1.T
+    L1_new = L1 + (a / N2) * (L1 @ A @ L1 - L1BL1)
+    L1_new = 0.5 * (L1_new + L1_new.T)
+
+    # ---- update L2 (holding the NEW L1; alternating block order) ----
+    _, C = AC(L1_new, L2)
+    d1, P1 = jnp.linalg.eigh(L1_new)
+    _, beta = _alpha_beta(d1, d2)
+    B2 = (P2 * beta[None, :]) @ P2.T
+    L2_new = L2 + (a / N1) * (L2 @ C @ L2 - B2)
+    L2_new = 0.5 * (L2_new + L2_new.T)
+    return L1_new, L2_new
+
+
+def theta_matrix_kron(L1: jax.Array, L2: jax.Array, batch: SubsetBatch) -> jax.Array:
+    """Dense Θ for the Kronecker kernel (batch-mode reference; O(N^2) memory)."""
+    N = L1.shape[0] * L2.shape[0]
+    N2 = L2.shape[0]
+
+    def one(idx, mask):
+        r, u = idx // N2, idx % N2
+        subL = L1[jnp.ix_(r, r)] * L2[jnp.ix_(u, u)]
+        m2 = jnp.outer(mask, mask)
+        eye = jnp.eye(idx.shape[0], dtype=subL.dtype)
+        inv, _ = masked_inv_and_logdet(jnp.where(m2, subL, eye))
+        inv = inv * m2
+        T = jnp.zeros((N, N), subL.dtype)
+        return T.at[jnp.ix_(idx, idx)].add(inv)
+
+    return jax.vmap(one)(batch.indices, batch.mask).mean(0)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic KrK-Picard: minibatch of subsets per step (paper Sec. 3.1.2)
+# ---------------------------------------------------------------------------
+
+def krk_picard_stochastic_step(L1, L2, minibatch: SubsetBatch, a: float = 1.0):
+    """Identical update with Δ built from a minibatch: O(Nκ^2 + N^{3/2})."""
+    return krk_picard_step(L1, L2, minibatch, a)
+
+
+# ---------------------------------------------------------------------------
+# Fit loop (host-side driver)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FitResult:
+    model: KronDPP
+    log_likelihoods: list
+    step_times: list
+
+
+def fit_krk_picard(model: KronDPP, batch: SubsetBatch, iters: int = 10,
+                   a: float = 1.0, minibatch_size: Optional[int] = None,
+                   seed: int = 0, track_ll: bool = True,
+                   use_dense_theta: bool = False) -> FitResult:
+    """Run Alg. 1 (batch, or stochastic if minibatch_size is set)."""
+    import time
+    import numpy as np
+
+    L1, L2 = model.factors
+    lls, times = [], []
+    rng = np.random.default_rng(seed)
+    if track_ll:
+        lls.append(float(KronDPP((L1, L2)).log_likelihood(batch)))
+    for it in range(iters):
+        if minibatch_size is not None:
+            sel = rng.choice(batch.n, size=minibatch_size, replace=False)
+            sub = SubsetBatch(batch.indices[sel], batch.mask[sel])
+        else:
+            sub = batch
+        t0 = time.perf_counter()
+        L1, L2 = krk_picard_step(L1, L2, sub, a, use_dense_theta)
+        jax.block_until_ready((L1, L2))
+        times.append(time.perf_counter() - t0)
+        if track_ll:
+            lls.append(float(KronDPP((L1, L2)).log_likelihood(batch)))
+    return FitResult(KronDPP((L1, L2)), lls, times)

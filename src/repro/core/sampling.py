@@ -1,0 +1,136 @@
+"""Exact DPP sampling (paper Alg. 2) and its KronDPP specialization (Sec. 4).
+
+Full kernel:   O(N^3 + N k^3)   (eigendecomposition dominates)
+KronDPP m=2:   O(N^{3/2} + N k^3)
+KronDPP m=3:   O(N + N k^3) = O(N k^3)
+
+The phase-2 selection loop is shared. It is a host-side sampler (used by the
+data pipeline off the accelerator critical path), so it runs eagerly with
+numpy-style control flow; the per-step linear algebra is jax.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .krondpp import KronDPP
+
+
+def _phase2_select(rng: np.random.Generator, V: np.ndarray) -> List[int]:
+    """Standard elementary-DPP projection sampling.
+
+    V: (N, k) orthonormal columns. Returns k selected item indices.
+    Per iteration: sample i ~ (1/|V|) sum_j V[i,j]^2, then project the basis
+    onto the complement of e_i and re-orthonormalize (Gram-Schmidt via QR).
+    """
+    Y: List[int] = []
+    V = V.copy()
+    while V.shape[1] > 0:
+        p = (V ** 2).sum(axis=1)
+        p = np.maximum(p, 0.0)
+        p = p / p.sum()
+        i = int(rng.choice(len(p), p=p))
+        Y.append(i)
+        # Eliminate the component along e_i: pick column with largest |V[i,j]|
+        j = int(np.argmax(np.abs(V[i])))
+        col = V[:, j].copy()
+        denom = col[i]
+        V = V - np.outer(col / denom, V[i])
+        V = np.delete(V, j, axis=1)
+        if V.shape[1] > 0:
+            # Re-orthonormalize (thin QR keeps O(N k^2) per step -> O(N k^3))
+            V, _ = np.linalg.qr(V)
+    return Y
+
+
+def sample_dpp(rng: np.random.Generator, eigvals: np.ndarray, eigvecs: np.ndarray
+               ) -> List[int]:
+    """Alg. 2 with a precomputed eigendecomposition of L."""
+    lam = np.asarray(eigvals)
+    probs = lam / (1.0 + lam)
+    J = np.nonzero(rng.random(lam.shape[0]) < probs)[0]
+    if len(J) == 0:
+        return []
+    V = np.asarray(eigvecs)[:, J]
+    return _phase2_select(rng, V)
+
+
+def sample_full_dpp(rng: np.random.Generator, L: np.ndarray) -> List[int]:
+    """O(N^3) baseline sampler for a dense kernel."""
+    lam, vecs = np.linalg.eigh(np.asarray(L))
+    lam = np.maximum(lam, 0.0)
+    return sample_dpp(rng, lam, vecs)
+
+
+def sample_krondpp(rng: np.random.Generator, dpp: KronDPP) -> List[int]:
+    """Sec. 4 sampler: factor eigendecompositions + lazy eigenvectors.
+
+    Phase 1 runs over the N eigenvalues as an outer product (never
+    materializing eigenvectors); only the |J| selected eigenvectors are
+    built, each in O(N), so setup is O(sum N_i^3 + N|J|).
+    """
+    eigs = [np.linalg.eigh(np.asarray(f)) for f in dpp.factors]
+    lams = [np.maximum(e[0], 0.0) for e in eigs]
+    vecs = [e[1] for e in eigs]
+
+    # Phase 1 over the product spectrum, factor-by-factor to stay O(N) memory.
+    lam_all = lams[0]
+    for l in lams[1:]:
+        lam_all = np.multiply.outer(lam_all, l).reshape(-1)
+    probs = lam_all / (1.0 + lam_all)
+    J = np.nonzero(rng.random(lam_all.shape[0]) < probs)[0]
+    if len(J) == 0:
+        return []
+
+    # Lazily build selected eigenvectors: v_(i1..im) = kron(v1_i1, ..., vm_im)
+    sizes = [f.shape[0] for f in dpp.factors]
+    cols = []
+    for g in J:
+        parts = []
+        rem = int(g)
+        for s in sizes[::-1]:
+            parts.append(rem % s)
+            rem //= s
+        parts = parts[::-1]
+        v = vecs[0][:, parts[0]]
+        for k in range(1, len(sizes)):
+            v = np.outer(v, vecs[k][:, parts[k]]).reshape(-1)
+        cols.append(v)
+    V = np.stack(cols, axis=1)
+    return _phase2_select(rng, V)
+
+
+# ---------------------------------------------------------------------------
+# Greedy MAP (used by the serving-side KV compaction; jit-able, fixed k)
+# ---------------------------------------------------------------------------
+
+def greedy_map_kdpp(L: jax.Array, k: int) -> jax.Array:
+    """Greedy MAP for a k-DPP: iteratively add the item maximizing the
+    conditional variance (Chen et al. 2018 fast greedy MAP, Cholesky-update
+    form). O(N k^2); jit-able with static k. Returns (k,) int32 indices.
+
+    d_i tracks the conditional variance of each item; c_i rows build the
+    Cholesky factor of L_Y restricted to chosen items.
+    """
+    N = L.shape[0]
+
+    def body(state, _):
+        d, C, chosen_mask, t = state
+        scores = jnp.where(chosen_mask, -jnp.inf, d)
+        j = jnp.argmax(scores)
+        dj = jnp.maximum(d[j], 1e-12)
+        # e = (L[:, j] - C @ C[j]) / sqrt(d_j)
+        e = (L[:, j] - C @ C[j]) / jnp.sqrt(dj)
+        d_new = d - e * e
+        C_new = jax.lax.dynamic_update_index_in_dim(C.T, e, t, axis=0).T
+        return (d_new, C_new, chosen_mask.at[j].set(True), t + 1), j
+
+    d0 = jnp.diagonal(L)
+    C0 = jnp.zeros((N, k), L.dtype)
+    (_, _, _, _), picks = jax.lax.scan(
+        body, (d0, C0, jnp.zeros((N,), bool), 0), None, length=k)
+    return picks.astype(jnp.int32)

@@ -1,0 +1,4 @@
+from .pipeline import TokenPipeline, synthetic_corpus
+from .dpp_selection import DPPBatchSelector
+
+__all__ = ["TokenPipeline", "synthetic_corpus", "DPPBatchSelector"]

@@ -1,0 +1,3 @@
+from .sharding import ShardingPolicy
+
+__all__ = ["ShardingPolicy"]

@@ -1,0 +1,217 @@
+"""Sharding policy: maps every param / activation / cache tensor to a
+PartitionSpec on the (pod, data, model) mesh.
+
+Policy (DESIGN.md §6):
+  * TP over "model": attention heads, FFN hidden dim, expert dim (EP), vocab
+    for the LM head.
+  * FSDP over ("pod","data"): the non-TP dim of every large param and its
+    optimizer state (ZeRO-3 equivalent under GSPMD).
+  * batch over ("pod","data"); long-context decode (batch=1) shards the KV
+    sequence instead (SP).
+  * Divisibility guard: any dim not divisible by its axis group is
+    replicated instead (keeps every arch compilable on the same mesh —
+    e.g. whisper-tiny's 6 heads on a 16-way model axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..config import ModelConfig, ParallelConfig
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        s = str(k)
+        parts.append(s.strip(".[]'\""))
+    return "/".join(parts)
+
+
+class ShardingPolicy:
+    def __init__(self, mesh: Mesh, cfg: ModelConfig,
+                 parallel: Optional[ParallelConfig] = None):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.par = parallel or ParallelConfig()
+        self.dp: Tuple[str, ...] = tuple(
+            a for a in mesh.axis_names if a in ("pod", "data"))
+        self.tp: Optional[str] = "model" if "model" in mesh.axis_names else None
+
+    # -- helpers -------------------------------------------------------------
+    def _fits(self, dim: int, axes) -> bool:
+        return axes is not None and len(axes) > 0 if isinstance(axes, tuple) \
+            else axes is not None
+
+    def _div(self, dim: int, axes) -> bool:
+        if axes is None or (isinstance(axes, tuple) and not axes):
+            return False
+        return dim % _axis_size(self.mesh, axes) == 0
+
+    def _div_tp(self, dim: int) -> bool:
+        """TP dims may shard unevenly (GSPMD pads; waste bounded ~2x)."""
+        if self.tp is None:
+            return False
+        size = _axis_size(self.mesh, self.tp)
+        return dim % size == 0 or dim >= size // 2
+
+    def _mat(self, s, tp_dim: int, fsdp_dim: Optional[int], off: int = 0):
+        spec = [None] * (off + len(s))
+        if self.par.tp and self.tp and self._div_tp(s[tp_dim]):
+            spec[off + tp_dim] = self.tp
+        if self.par.fsdp and fsdp_dim is not None and self._div(s[fsdp_dim], self.dp):
+            spec[off + fsdp_dim] = self.dp
+        return P(*spec)
+
+    # -- parameters ----------------------------------------------------------
+    def param_spec(self, path: str, shape) -> P:
+        return param_partition_spec(path, shape, self.mesh, self.dp, self.tp,
+                                    fsdp=self.par.fsdp, tp_on=self.par.tp)
+
+    def params_shardings(self, params_shapes) -> Any:
+        def one(kp, leaf):
+            return NamedSharding(self.mesh,
+                                 self.param_spec(_path_str(kp), leaf.shape))
+        return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+    # -- batches ---------------------------------------------------------------
+    def batch_shardings(self, batch_shapes) -> Any:
+        def one(leaf):
+            if leaf.ndim >= 1 and self._div(leaf.shape[0], self.dp):
+                return NamedSharding(self.mesh, P(self.dp))
+            return NamedSharding(self.mesh, P())
+        return jax.tree_util.tree_map(one, batch_shapes)
+
+    # -- decode state ------------------------------------------------------------
+    def decode_state_shardings(self, state_shapes) -> Any:
+        """KV cache k/v: (units, B, S, KV, hd); SSM state: (units, B, nh, hp, N);
+        conv state: (units, B, k-1, conv_dim); enc_out: (B, S_enc, d)."""
+        mesh, dp, tp = self.mesh, self.dp, self.tp
+
+        def one(kp, leaf):
+            path = _path_str(kp)
+            leafname = path.split("/")[-1]
+            shape = leaf.shape
+            spec = [None] * len(shape)
+            batch_ok = len(shape) >= 2 and self._div(shape[1], dp)
+            if leafname in ("k", "v") and len(shape) == 5:
+                if batch_ok:
+                    spec[1] = dp
+                    seq_axes = []
+                else:
+                    seq_axes = list(dp)
+                if self.par.tp and tp and self._div(shape[3], tp):
+                    spec[3] = tp
+                elif self.par.tp and tp:
+                    seq_axes.append(tp)
+                if seq_axes and self.par.seq_shard_decode and \
+                        shape[2] % _axis_size(mesh, tuple(seq_axes)) == 0:
+                    spec[2] = tuple(seq_axes)
+            elif leafname == "state" and len(shape) == 5:
+                if batch_ok:
+                    spec[1] = dp
+                if self.par.tp and tp and self._div(shape[2], tp):
+                    spec[2] = tp     # SSM heads over model
+            elif leafname == "conv" and len(shape) == 4:
+                if batch_ok:
+                    spec[1] = dp
+                if self.par.tp and tp and self._div(shape[3], tp):
+                    spec[3] = tp
+            elif leafname == "enc_out" and len(shape) == 3:
+                if self._div(shape[0], dp):
+                    spec[0] = dp
+            return NamedSharding(mesh, P(*spec))
+
+        return jax.tree_util.tree_map_with_path(one, state_shapes)
+
+    # -- outputs -----------------------------------------------------------------
+    def logits_shardings(self, batch: int) -> NamedSharding:
+        spec = [None, None, None]
+        if self._div(batch, self.dp):
+            spec[0] = self.dp
+        if self.par.tp and self.tp and self._div(self.cfg.vocab, self.tp):
+            spec[2] = self.tp
+        return NamedSharding(self.mesh, P(*spec))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Shared rule table (also used by constraints.constrain_params inside scan
+# bodies so param COTANGENTS inherit shardings through nested scan+remat)
+# ---------------------------------------------------------------------------
+
+def _uneven_ok(dim: int, size: int) -> bool:
+    return dim % size == 0 or dim >= size // 2
+
+
+def param_partition_spec(path: str, shape, mesh: Mesh, dp, tp,
+                         fsdp: bool = True, tp_on: bool = True, **kw) -> P:
+    parts = path.split("/")
+    leaf = parts[-1]
+    # leading stack dims: one for the unit scan (blocks/encoder/cross), one
+    # more for the nested tail scan (reps) — e.g. blocks/tail/... has two.
+    off = 0
+    if parts[0] in ("blocks", "encoder", "cross"):
+        off += 1
+    if "tail" in parts[:-1]:
+        off += 1
+    s = tuple(shape[off:])
+    nd = len(s)
+    dp_size = _axis_size(mesh, dp)
+    tp_size = _axis_size(mesh, tp) if tp else 0
+
+    def mat(tp_dim, fsdp_dim):
+        spec = [None] * (off + nd)
+        if tp_on and tp and _uneven_ok(s[tp_dim], tp_size):
+            spec[off + tp_dim] = tp
+        if fsdp and fsdp_dim is not None and dp and s[fsdp_dim] % dp_size == 0:
+            spec[off + fsdp_dim] = dp
+        return P(*spec)
+
+    if "moe" in path and leaf in ("w_gate", "w_up", "w_down") and nd == 3:
+        spec = [None] * (off + 3)
+        if tp_on and tp and s[0] % tp_size == 0:
+            spec[off + 0] = tp                    # EP: experts over model
+            if fsdp and dp and s[2] % dp_size == 0:
+                spec[off + 2] = dp
+        elif tp_on and tp:
+            # few-expert models (Mixtral E=8 < TP=16): expert-internal TP on
+            # the ffn-hidden dim instead of replicating 47B of experts
+            f_dim = 2 if leaf in ("w_gate", "w_up") else 1
+            if s[f_dim] % tp_size == 0:
+                spec[off + f_dim] = tp
+            other = 2 if f_dim == 1 else 1
+            if fsdp and dp and s[other] % dp_size == 0:
+                spec[off + other] = dp
+        return P(*spec)
+    if leaf in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj") and nd == 2:
+        return mat(1, 0)
+    if leaf in ("wo", "w_down", "out_proj") and nd == 2:
+        return mat(0, 1)
+    if leaf in ("bq", "bk", "bv", "conv_b", "norm") and nd == 1:
+        return mat(0, None)
+    if leaf == "conv_w" and nd == 2:
+        return mat(1, None)
+    if leaf == "embed":
+        # vocab over TP (Megatron-style: masked local gather + small
+        # all-reduce; keeps tied-head logits V-sharded), d_model over FSDP.
+        return mat(0, 1)
+    if leaf == "lm_head":
+        return mat(1, 0)
+    return P(*([None] * (off + nd)))

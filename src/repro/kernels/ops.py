@@ -1,0 +1,129 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to MXU-aligned shapes, VMEM-aware block-size selection, and
+the CPU fallback: on non-TPU backends the wrappers run the kernels in
+interpret mode (small shapes, tests) or dispatch to the jnp oracle (large
+shapes), so library code can call these unconditionally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kron_matvec import kron_matvec_pallas
+from .partial_trace import partial_trace_A_pallas, partial_trace_C_pallas
+from .greedy_map import greedy_map_update_pallas
+
+_VMEM_BUDGET = 12 * 2 ** 20  # bytes we allow a single kernel tile set to claim
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# kron_matvec
+# ---------------------------------------------------------------------------
+
+def kron_matvec(A: jax.Array, B: jax.Array, X: jax.Array,
+                force_pallas: bool = False) -> jax.Array:
+    """Batched (A ⊗ B) X. X: (batch, N1*N2)."""
+    N1, N2 = A.shape[0], B.shape[0]
+    batch = X.shape[0]
+    use_pallas = _on_tpu() or force_pallas
+    if not use_pallas:
+        return ref.kron_matvec_ref(A, B, X)
+    align = 128 if _on_tpu() else 1
+    P1, P2 = _round_up(N1, align), _round_up(N2, align)
+    bb = 1
+    while bb < 8 and (bb * 2 * P1 * P2 * 2 + P1 * P1 + P2 * P2) * 4 <= _VMEM_BUDGET:
+        bb *= 2
+    Bp = _round_up(batch, bb)
+    Ap = jnp.zeros((P1, P1), A.dtype).at[:N1, :N1].set(A)
+    Bp_ = jnp.zeros((P2, P2), B.dtype).at[:N2, :N2].set(B)
+    Xp = jnp.zeros((Bp, P1 * P2), X.dtype)
+    Xp = Xp.at[:batch].set(
+        jnp.pad(X.reshape(batch, N1, N2), ((0, 0), (0, P1 - N1), (0, P2 - N2))
+                ).reshape(batch, P1 * P2))
+    Y = kron_matvec_pallas(Ap, Bp_, Xp, block_batch=bb,
+                           interpret=not _on_tpu())
+    return Y[:batch].reshape(batch, P1, P2)[:, :N1, :N2].reshape(batch, N1 * N2)
+
+
+# ---------------------------------------------------------------------------
+# partial traces (KrK-Picard batch route)
+# ---------------------------------------------------------------------------
+
+def partial_trace_A(theta: jax.Array, L2: jax.Array, N1: int, N2: int,
+                    force_pallas: bool = False) -> jax.Array:
+    theta4 = theta.reshape(N1, N2, N1, N2)
+    if not (_on_tpu() or force_pallas):
+        return ref.partial_trace_A_ref(theta4, L2)
+    bk = bl = 1
+    while bk < N1 and N1 % (bk * 2) == 0 and (2 * bk) * bl * N2 * N2 * 4 <= _VMEM_BUDGET:
+        bk *= 2
+    while bl < N1 and N1 % (bl * 2) == 0 and bk * (2 * bl) * N2 * N2 * 4 <= _VMEM_BUDGET:
+        bl *= 2
+    return partial_trace_A_pallas(theta4, L2, bk=bk, bl=bl,
+                                  interpret=not _on_tpu())
+
+
+def partial_trace_C(theta: jax.Array, L1: jax.Array, N1: int, N2: int,
+                    force_pallas: bool = False) -> jax.Array:
+    theta4 = theta.reshape(N1, N2, N1, N2)
+    if not (_on_tpu() or force_pallas):
+        return ref.partial_trace_C_ref(theta4, L1)
+    bu = bv = 1
+    while bu < N2 and N2 % (bu * 2) == 0 and (2 * bu) * bv * N1 * N1 * 4 <= _VMEM_BUDGET:
+        bu *= 2
+    while bv < N2 and N2 % (bv * 2) == 0 and bu * (2 * bv) * N1 * N1 * 4 <= _VMEM_BUDGET:
+        bv *= 2
+    return partial_trace_C_pallas(theta4, L1, bu=bu, bv=bv,
+                                  interpret=not _on_tpu())
+
+
+# ---------------------------------------------------------------------------
+# greedy MAP (k-DPP) built on the Pallas step kernel
+# ---------------------------------------------------------------------------
+
+def greedy_map_update(lcol, C, cj, dj, d, force_pallas: bool = False):
+    if not (_on_tpu() or force_pallas):
+        return ref.greedy_map_update_ref(lcol, C, cj, dj, d)
+    N = d.shape[0]
+    bn = min(512, N)
+    while N % bn != 0:
+        bn //= 2
+    return greedy_map_update_pallas(lcol, C, cj, dj, d, block_n=bn,
+                                    interpret=not _on_tpu())
+
+
+def greedy_map_kdpp(L: jax.Array, k: int, force_pallas: bool = False) -> jax.Array:
+    """Full greedy MAP selection of k items using the step kernel.
+
+    Equivalent to core.sampling.greedy_map_kdpp; this version routes the
+    O(Nk) inner update through the Pallas kernel.
+    """
+    N = L.shape[0]
+
+    def body(state, t):
+        d, C, chosen = state
+        scores = jnp.where(chosen, -jnp.inf, d)
+        j = jnp.argmax(scores)
+        e, d_new = greedy_map_update(
+            L[:, j], C, C[j], d[j][None], d, force_pallas=force_pallas)
+        C_new = jax.lax.dynamic_update_index_in_dim(C.T, e, t, axis=0).T
+        return (d_new, C_new, chosen.at[j].set(True)), j
+
+    d0 = jnp.diagonal(L).astype(jnp.float32)
+    C0 = jnp.zeros((N, k), jnp.float32)
+    (_, _, _), picks = jax.lax.scan(
+        body, (d0, C0, jnp.zeros((N,), bool)), jnp.arange(k))
+    return picks.astype(jnp.int32)

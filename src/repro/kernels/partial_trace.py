@@ -1,0 +1,88 @@
+"""Pallas TPU kernels for the Appendix-B partial-trace contractions:
+
+    A[k,l] = Tr(Θ_(kl) · L2) = Σ_{u,v} Θ4[k,u,l,v] L2[v,u]      (B.1)
+    C[u,v] = Σ_{i,j} L1[i,j] Θ4[i,u,j,v]                        (B.2)
+
+These are the batch-mode hot spots of KrK-Picard once Θ is materialized
+(O(N²) data read exactly once → memory-bound; the kernel's job is to stream
+Θ HBM→VMEM in MXU-aligned tiles and never re-read it).
+
+Tiling for A: grid (N1/bk, N1/bl); each step loads the Θ4 tile
+(bk, N2, bl, N2), reorders to (bk·bl, N2·N2) in VMEM, and contracts with
+vec(L2ᵀ) kept resident — one matvec per tile, fp32 accumulate.
+
+VMEM (bk=bl=8, N2=256, fp32): tile 8·256·8·256·4B = 16MB... so defaults are
+(bk=bl=4, N2≤256 → 4MB) or (bk=bl=8, N2≤128 → 4MB); ops.py picks block sizes
+from a VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_A(theta_ref, w_ref, o_ref):
+    # theta tile: (bk, N2, bl, N2); w: (N2*N2,) = vec(L2.T)
+    t = theta_ref[...]
+    bk, n2, bl, _ = t.shape
+    t = t.transpose(0, 2, 1, 3).reshape(bk * bl, n2 * n2)
+    w = w_ref[...].reshape(n2 * n2, 1)
+    o = jax.lax.dot_general(t, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[...] = o.reshape(bk, bl).astype(o_ref.dtype)
+
+
+def _kernel_C(theta_ref, l1_ref, acc_ref):
+    # theta tile: (N1, bu, N1, bv) — full factor-1 dims; l1: (N1, N1)
+    t = theta_ref[...]
+    n1, bu, _, bv = t.shape
+    t = t.transpose(1, 3, 0, 2).reshape(bu * bv, n1 * n1)
+    w = l1_ref[...].reshape(n1 * n1, 1)
+    o = jax.lax.dot_general(t, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    acc_ref[...] = o.reshape(bu, bv).astype(acc_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bl", "interpret"))
+def partial_trace_A_pallas(theta4: jax.Array, L2: jax.Array,
+                           bk: int = 4, bl: int = 4,
+                           interpret: bool = False) -> jax.Array:
+    """theta4: (N1, N2, N1, N2) -> A: (N1, N1)."""
+    N1, N2 = theta4.shape[0], theta4.shape[1]
+    assert N1 % bk == 0 and N1 % bl == 0
+    w = L2.T.reshape(-1)
+    return pl.pallas_call(
+        _kernel_A,
+        grid=(N1 // bk, N1 // bl),
+        in_specs=[
+            pl.BlockSpec((bk, N2, bl, N2), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((N2 * N2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bk, bl), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N1, N1), jnp.float32),
+        interpret=interpret,
+    )(theta4, w)
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bv", "interpret"))
+def partial_trace_C_pallas(theta4: jax.Array, L1: jax.Array,
+                           bu: int = 4, bv: int = 4,
+                           interpret: bool = False) -> jax.Array:
+    """theta4: (N1, N2, N1, N2) -> C: (N2, N2)."""
+    N1, N2 = theta4.shape[0], theta4.shape[1]
+    assert N2 % bu == 0 and N2 % bv == 0
+    return pl.pallas_call(
+        _kernel_C,
+        grid=(N2 // bu, N2 // bv),
+        in_specs=[
+            pl.BlockSpec((N1, bu, N1, bv), lambda i, j: (0, i, 0, j)),
+            pl.BlockSpec((N1, N1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bu, bv), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N2, N2), jnp.float32),
+        interpret=interpret,
+    )(theta4, L1)

@@ -1,0 +1,6 @@
+"""Launchers. NOTE: dryrun must be imported/run as a fresh process (it sets
+XLA device-count flags before jax import); never import it from library code.
+"""
+from .mesh import make_production_mesh, make_mesh_from_devices
+
+__all__ = ["make_production_mesh", "make_mesh_from_devices"]

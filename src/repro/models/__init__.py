@@ -1,0 +1,5 @@
+from .transformer import LM, DecodeState
+from .attention import KVCache
+from .ssm import SSMCache
+
+__all__ = ["LM", "DecodeState", "KVCache", "SSMCache"]

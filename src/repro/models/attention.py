@@ -1,0 +1,210 @@
+"""GQA attention: chunked (memory-bounded) train/prefill path + cached decode.
+
+Memory design (CPU dry-run & TPU alike): the S×S score matrix is never
+materialized. Queries are processed in chunks of `cfg.attn_chunk` under
+`lax.scan`; each chunk attends either to the full key set (masked, full
+attention) or to a statically-sized sliding band (SWA archs — FLOPs linear in
+S). Scores are fp32; einsum operands stay in activation dtype.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, rope, seq_map, stable_softmax
+from ..config import ModelConfig
+from ..distributed.constraints import constrain, constrain_heads
+
+
+class KVCache(NamedTuple):
+    k: jax.Array           # (B, S_cache, KV, Dh)
+    v: jax.Array           # (B, S_cache, KV, Dh)
+    pos: jax.Array         # () int32 — tokens already cached (ring: logical)
+
+
+def init_attn_params(key, cfg: ModelConfig, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype),
+        "wk": dense_init(ks[1], (d, KV * hd), dtype),
+        "wv": dense_init(ks[2], (d, KV * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype),
+        "ln": jnp.ones((d,), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (constrain_heads(q.reshape(B, S, H, hd)),
+            constrain_heads(k.reshape(B, S, KV, hd)),
+            constrain_heads(v.reshape(B, S, KV, hd)))
+
+
+def _chunk_attend(q, k, v, q_pos, k_pos, *, causal: bool, scale: float,
+                  window: Optional[int] = None):
+    """One query chunk vs a key slab. q: (B,Cq,H,hd), k/v: (B,Sk,KV,hd).
+
+    q_pos: (Cq,) global query positions; k_pos: (Sk,) global key positions
+    (may include invalid = -1 entries which are masked out).
+    """
+    B, Cq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, Cq, KV, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    valid = k_pos[None, :] >= 0
+    mask = valid
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    probs = stable_softmax(scores, mask[None, None, None])
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Cq, H * hd).astype(q.dtype)
+
+
+def attention_forward(p, x: jax.Array, cfg: ModelConfig, *, causal: bool = True,
+                      kv_from: Optional[jax.Array] = None,
+                      return_kv: bool = False):
+    """Full-sequence attention (train / prefill), chunked over queries.
+
+    kv_from: optional encoder states for cross-attention (B, S_enc, d).
+    return_kv: prefill mode — also return the rope'd (k, v) for cache fill.
+    """
+    B, S, d = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    src = kv_from if kv_from is not None else h
+    q, _, _ = _qkv(p, h, cfg)
+    _, k, v = _qkv(p, src, cfg)
+    Sk = src.shape[1]
+    scale = cfg.hd ** -0.5
+
+    if kv_from is None:
+        pos = jnp.arange(S)
+        q = rope(q, pos[None, :], cfg.rope_theta)
+        k = rope(k, pos[None, :], cfg.rope_theta)
+        k_pos_full = pos
+    else:
+        k_pos_full = jnp.arange(Sk)
+
+    C = min(cfg.attn_chunk, S)
+    n_chunks = S // C if S % C == 0 else 1
+    if S % C != 0:
+        C = S
+        n_chunks = 1
+
+    W = cfg.sliding_window
+    remat_chunk = (lambda f: jax.checkpoint(f)) if cfg.remat else (lambda f: f)
+    if W is not None and causal and kv_from is None and S > W + C:
+        # Banded SWA: per q-chunk, slice a static (W + C)-wide key band.
+        band = W + C
+
+        @remat_chunk
+        def band_chunk(i):
+            q_c = jax.lax.dynamic_slice_in_dim(q, i * C, C, axis=1)
+            start = jnp.maximum(i * C + C - band, 0)
+            k_b = jax.lax.dynamic_slice(k, (0, start, 0, 0), (B, band) + k.shape[2:])
+            v_b = jax.lax.dynamic_slice(v, (0, start, 0, 0), (B, band) + v.shape[2:])
+            q_pos = i * C + jnp.arange(C)
+            k_pos = start + jnp.arange(band)
+            return _chunk_attend(q_c, k_b, v_b, q_pos, k_pos, causal=True,
+                                 scale=scale, window=W)
+
+        outs = seq_map(band_chunk, jnp.arange(n_chunks), cfg.unroll_scans)
+        out = outs.transpose(1, 0, 2, 3).reshape(B, S, -1)
+    else:
+        @remat_chunk
+        def full_chunk(i):
+            q_c = jax.lax.dynamic_slice_in_dim(q, i * C, C, axis=1)
+            q_pos = i * C + jnp.arange(C)
+            return _chunk_attend(q_c, k, v, q_pos, k_pos_full, causal=causal,
+                                 scale=scale,
+                                 window=W if (causal and kv_from is None) else None)
+
+        outs = seq_map(full_chunk, jnp.arange(n_chunks), cfg.unroll_scans)
+        out = outs.transpose(1, 0, 2, 3).reshape(B, S, -1)
+
+    y = x + out @ p["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def fill_kv_cache(cfg: ModelConfig, k: jax.Array, v: jax.Array) -> KVCache:
+    """Turn prefill (k, v) of length S into a decode-ready cache.
+
+    Full attention: cache slots [0..S). SWA: ring buffer of the last W keys,
+    placed so slot s holds logical position p ≡ s (mod W).
+    """
+    B, S = k.shape[0], k.shape[1]
+    W = cfg.sliding_window
+    if W is None or S <= W:
+        return KVCache(k=k, v=v, pos=jnp.array(S, jnp.int32))
+    k_tail, v_tail = k[:, S - W:], v[:, S - W:]
+    shift = S % W
+    return KVCache(k=jnp.roll(k_tail, shift, axis=1),
+                   v=jnp.roll(v_tail, shift, axis=1),
+                   pos=jnp.array(S, jnp.int32))
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    """Cache sized to min(max_len, window) — SWA archs get a ring buffer."""
+    size = max_len if cfg.sliding_window is None else min(max_len, cfg.sliding_window)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return KVCache(
+        k=jnp.zeros((batch, size, KV, hd), dtype),
+        v=jnp.zeros((batch, size, KV, hd), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def attention_decode(p, x: jax.Array, cache: KVCache, cfg: ModelConfig,
+                     kv_from: Optional[jax.Array] = None):
+    """One-token decode. x: (B, 1, d). Returns (y, new_cache)."""
+    B, _, d = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k_new, v_new = _qkv(p, h, cfg)
+    scale = cfg.hd ** -0.5
+    pos = cache.pos
+
+    if kv_from is not None:
+        # cross-attention: static encoder keys live in the "cache"
+        k, v = cache.k, cache.v
+        k_pos = jnp.arange(k.shape[1])
+        out = _chunk_attend(q, k, v, jnp.zeros((1,), jnp.int32) + 10 ** 9,
+                            k_pos, causal=False, scale=scale)
+        return x + out @ p["wo"], cache
+
+    q = rope(q, pos[None, None], cfg.rope_theta)
+    k_new = rope(k_new, pos[None, None], cfg.rope_theta)
+    size = cache.k.shape[1]
+    slot = jnp.mod(pos, size)                       # ring for SWA, linear else
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    idx = jnp.arange(size)
+    if cfg.sliding_window is None:
+        k_pos = jnp.where(idx <= pos, idx, -1)
+    else:
+        # ring buffer: slot s holds logical position p where p ≡ s (mod size)
+        age = jnp.mod(slot - idx, size)
+        logical = pos - age
+        k_pos = jnp.where((logical >= 0) & (logical > pos - size), logical, -1)
+    out = _chunk_attend(q, k, v, pos[None], k_pos, causal=True, scale=scale)
+    return x + out @ p["wo"], KVCache(k, v, pos + 1)

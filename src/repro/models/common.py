@@ -1,0 +1,63 @@
+"""Shared model components: initializers, norms, rotary embeddings."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in or shape[0]
+    scale = 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding. x: (..., S, H, Dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]    # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    # silu in compute dtype (bf16) — halves the FFN activation working set;
+    # normalizations/softmax/CE stay fp32.
+    return jax.nn.silu(gate) * up
+
+
+def seq_map(f, xs, unroll: bool = False):
+    """Sequential map with optional full unroll (dry-run cost accounting)."""
+    def body(_, x):
+        return None, f(x)
+    _, out = jax.lax.scan(body, None, xs, unroll=len(xs) if unroll else 1)
+    return out
+
+
+def stable_softmax(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked softmax in fp32; fully-masked rows yield zeros (not NaN)."""
+    scores = jnp.where(mask, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    e = jnp.where(mask, e, 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(denom, 1e-30)

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN with per-group sort-based dispatch (dropping, GShard
+capacity discipline) — no dense one-hot dispatch einsum, so expert FLOPs stay
+at `tokens × top_k × 3·d·d_ff × 2 × capacity_factor` (the true active cost).
+
+Sharding contract (see distributed/sharding.py):
+  tokens (G, Tg, d): G over ("pod","data")   — groups never cross devices,
+                                                so the per-group sort is local;
+  expert buffers (G, E, C, d): E over "model" — XLA inserts the all-to-all at
+                                                the dispatch/undispatch
+                                                boundary (the MoE collective);
+  expert weights (E, d, f): E over "model", f/d over data axes under FSDP.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, swiglu
+from ..config import ModelConfig
+from ..distributed.constraints import constrain
+
+
+def init_moe_params(key, cfg: ModelConfig, dtype):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, f), dtype, fan_in=d),
+        "w_up": dense_init(ks[2], (E, d, f), dtype, fan_in=d),
+        "w_down": dense_init(ks[3], (E, f, d), dtype, fan_in=f),
+        "ln": jnp.ones((d,), dtype),
+    }
+
+
+def group_capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    cap = math.ceil(tokens_per_group * cfg.experts_per_token
+                    * cfg.capacity_factor / cfg.n_experts)
+    return max(cap, 1)
+
+
+def moe_ffn(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). Groups = batch rows (B sharded over data)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    C = group_capacity(S, cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    # --- routing (fp32) ---
+    logits = h.astype(jnp.float32) @ p["router"]            # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                  # (B, S, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- per-group sort-based slotting (local; no collectives) ---
+    def slot_one(e_ids):
+        # e_ids: (S*K,) expert of each (token, k) pair within a group
+        order = jnp.argsort(e_ids)                          # stable
+        sorted_e = e_ids[order]
+        # rank within expert = position - start of that expert's run
+        starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+        rank = jnp.arange(S * K) - starts[sorted_e]
+        dest = jnp.where(rank < C, sorted_e * C + rank, E * C)  # E*C = dropped
+        # invert the sort: slot for pair j is dest[order^-1[j]]
+        inv = jnp.argsort(order)
+        return dest[inv]                                    # (S*K,)
+
+    flat_e = top_e.reshape(B, S * K)
+    dest = jax.vmap(slot_one)(flat_e)                       # (B, S*K)
+
+    # --- dispatch: scatter token embeddings into (B, E*C+1, d) buffers ---
+    tok_idx = jnp.repeat(jnp.arange(S), K)                  # (S*K,)
+
+    def scatter_one(h_g, dest_g):
+        buf = jnp.zeros((E * C + 1, d), h_g.dtype)
+        return buf.at[dest_g].set(h_g[tok_idx])
+
+    buf = jax.vmap(scatter_one)(h, dest)[:, : E * C, :]     # (B, E*C, d)
+    buf = buf.reshape(B, E, C, d)
+
+    # --- expert FFN (E sharded over "model": all-to-all happens here) ---
+    buf = constrain(buf, "batch", "model", None, None)
+    gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    act = swiglu(gate, up)
+    out = jnp.einsum("becf,efd->becd", act, p["w_down"])    # (B, E, C, d)
+    out = constrain(out, "batch", "model", None, None)
+
+    # --- undispatch: gather back and combine with routing weights ---
+    out = out.reshape(B, E * C, d)
+    out = jnp.concatenate([out, jnp.zeros((B, 1, d), out.dtype)], axis=1)
+
+    def gather_one(out_g, dest_g, w_g):
+        y_pairs = out_g[dest_g] * w_g[:, None].astype(out_g.dtype)  # (S*K, d)
+        return jax.ops.segment_sum(y_pairs, tok_idx, num_segments=S)
+
+    y = jax.vmap(gather_one)(out, dest, top_w.reshape(B, S * K))
+    return x + y.astype(x.dtype)
+
+
+def moe_aux_loss(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style): E * sum_e f_e * p_e."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    logits = h.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_e = jax.lax.top_k(probs, cfg.experts_per_token)[1]
+    hard = jax.nn.one_hot(top_e, cfg.n_experts).sum(-2)     # (B,S,E)
+    f = hard.mean((0, 1)) / cfg.experts_per_token
+    pbar = probs.mean((0, 1))
+    return cfg.n_experts * jnp.sum(f * pbar)

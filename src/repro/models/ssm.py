@@ -1,0 +1,176 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060), TPU-native.
+
+Training/prefill uses the chunked dual form: intra-chunk quadratic attention-
+like term (MXU matmuls over (chunk × chunk) tiles) + inter-chunk linear state
+recurrence (lax.scan over chunks). Decode is the O(1) recurrent update.
+
+n_groups = 1 (the assigned configs' setting). Head layout: d_inner =
+expand * d_model split into nh = d_inner / ssm_head_dim heads of hp dims.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+from ..config import ModelConfig
+from ..distributed.constraints import constrain
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array       # (B, k-1, conv_dim) rolling conv window
+    state: jax.Array      # (B, nh, hp, N) SSM state
+    pos: jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    hp = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N          # x, B, C channels go through the conv
+    return di, nh, hp, N, conv_dim
+
+
+def init_ssm_params(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di, nh, hp, N, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * N + nh   # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, in_dim), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), dtype, fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01))).astype(jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype),
+        "ln": jnp.ones((d,), dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via k shifted adds. u: (B, S, C), w: (k, C)."""
+    k = w.shape[0]
+    out = u * w[-1]
+    for t in range(1, k):
+        shifted = jnp.pad(u, ((0, 0), (t, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * w[-1 - t]
+    return jax.nn.silu(out + b)
+
+
+def _split(p, h, cfg: ModelConfig):
+    di, nh, hp, N, conv_dim = _dims(cfg)
+    zxbcdt = h @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: di + conv_dim]
+    dt_raw = zxbcdt[..., di + conv_dim:]
+    return z, xBC, dt_raw
+
+
+def ssm_forward(p, x: jax.Array, cfg: ModelConfig, return_state: bool = False):
+    """Chunked SSD. x: (B, S, d) -> (B, S, d).
+
+    return_state: prefill mode — also return the SSMCache after S tokens
+    (final SSD state + the raw pre-conv tail for the rolling conv window).
+    """
+    Bsz, S, d = x.shape
+    di, nh, hp, N, conv_dim = _dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xBC, dt_raw = _split(p, h, cfg)
+    conv_tail = xBC[:, S - (cfg.ssm_conv - 1):, :]
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = constrain(xBC[..., :di].reshape(Bsz, S, nh, hp),
+                   "batch", None, "model", None)
+    Bm = xBC[..., di: di + N]                      # (B, S, N)  (g = 1)
+    Cm = xBC[..., di + N:]                         # (B, S, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    a = -jnp.exp(p["A_log"])                                          # (nh,)
+    dA = dt * a                                                       # (B,S,nh) ≤ 0
+
+    # ---- sequential scan over chunks: one (B,Q,Q,nh) decay tile live at a
+    # time (memory-bounded, like the attention q-chunk scan) ----
+    xc = jnp.moveaxis(xs.reshape(Bsz, nc, Q, nh, hp), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, Q, nh), 1, 0)
+    dAc = jnp.moveaxis(dA.reshape(Bsz, nc, Q, nh), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32), 1, 0)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(state, inp):
+        x_c, dt_c, dA_c, B_c, C_c = inp               # leading dim = B
+        cum = jnp.cumsum(dA_c, axis=1)                # (B,Q,nh)
+        CB = jnp.einsum("bin,bjn->bij", C_c, B_c)     # (B,Q,Q)
+        L = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,Q,Q,nh)
+        L = jnp.where(tri[None, :, :, None], L, 0.0)
+        xdt = x_c.astype(jnp.float32) * dt_c[..., None]        # (B,Q,nh,hp)
+        Yd = jnp.einsum("bij,bijh,bjhp->bihp", CB, L, xdt)
+        Yi = jnp.einsum("bin,bhpn,bih->bihp", C_c, state, jnp.exp(cum))
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)              # (B,Q,nh)
+        S_c = jnp.einsum("bjh,bjhp,bjn->bhpn", decay_end * dt_c,
+                         x_c.astype(jnp.float32), B_c)
+        new_state = state * jnp.exp(cum[:, -1])[:, :, None, None] + S_c
+        return new_state, (Yd + Yi).astype(x.dtype)
+
+    init = jnp.zeros((Bsz, nh, hp, N), jnp.float32)
+    final_state, Ys = jax.lax.scan(chunk_step, init, (xc, dtc, dAc, Bc, Cc),
+                                   unroll=nc if cfg.unroll_scans else 1)
+    y = jnp.moveaxis(Ys, 0, 1).reshape(Bsz, S, nh, hp)
+    y = y + (p["D"][None, None, :, None] * xs.astype(jnp.float32)).astype(x.dtype)
+    y = y.reshape(Bsz, S, di)
+
+    # gated RMSNorm + out projection (gate in compute dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = x + y @ p["out_proj"]
+    if return_state:
+        cache = SSMCache(conv=conv_tail, state=final_state,
+                         pos=jnp.array(S, jnp.int32))
+        return out, cache
+    return out
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    di, nh, hp, N, conv_dim = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, nh, hp, N), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def ssm_decode(p, x: jax.Array, cache: SSMCache, cfg: ModelConfig):
+    """One-token recurrent update. x: (B, 1, d)."""
+    Bsz = x.shape[0]
+    di, nh, hp, N, conv_dim = _dims(cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xBC, dt_raw = _split(p, h[:, 0], cfg)
+
+    window = jnp.concatenate([cache.conv, xBC[:, None, :]], axis=1)   # (B,k,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    xs = xBC[:, :di].reshape(Bsz, nh, hp).astype(jnp.float32)
+    Bm = xBC[:, di: di + N].astype(jnp.float32)
+    Cm = xBC[:, di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    decay = jnp.exp(dt * -jnp.exp(p["A_log"]))                        # (B,nh)
+
+    state = cache.state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xs, Bm)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state)
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(Bsz, di).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = x + (y @ p["out_proj"])[:, None, :]
+    return out, SSMCache(new_conv, state, cache.pos + 1)

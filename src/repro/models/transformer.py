@@ -1,0 +1,475 @@
+"""Model assembly: decoder-only LMs (dense / MoE / SSM / hybrid) and the
+Whisper-style encoder-decoder, all as scanned stacks of repeating units.
+
+A "unit" is the smallest repeating block group:
+  homogeneous archs: 1 layer;  Jamba: `hybrid_period` layers (1 attn + 7
+  mamba, MoE every 2). Params of all units are stacked on axis 0 and applied
+  with lax.scan (+ optional remat), keeping HLO size O(unit) not O(depth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, embed_init, rms_norm, swiglu
+from .attention import (KVCache, attention_decode, attention_forward,
+                        fill_kv_cache, init_attn_params, init_kv_cache)
+from .moe import init_moe_params, moe_ffn
+from .ssm import SSMCache, init_ssm_cache, init_ssm_params, ssm_decode, ssm_forward
+from ..config import LayerKind, ModelConfig
+from ..distributed.constraints import constrain, constrain_bsd, constrain_params
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn_params(key, cfg: ModelConfig, dtype, gelu: bool = False):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[1], (d, f), dtype),
+         "w_down": dense_init(ks[2], (f, d), dtype, fan_in=f),
+         "ln": jnp.ones((d,), dtype)}
+    if not gelu:
+        p["w_gate"] = dense_init(ks[0], (d, f), dtype)
+    return p
+
+
+def dense_ffn(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if "w_gate" in p:
+        y = swiglu(h @ p["w_gate"], h @ p["w_up"])
+    else:
+        y = jax.nn.gelu((h @ p["w_up"]).astype(jnp.float32)).astype(h.dtype)
+    return x + y @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Units
+# ---------------------------------------------------------------------------
+
+def _unit_layout(cfg: ModelConfig) -> Tuple[int, Tuple[LayerKind, ...]]:
+    """(n_units, kinds of the layers inside one unit)."""
+    if cfg.hybrid_period:
+        period = cfg.hybrid_period
+        assert cfg.n_layers % period == 0
+        return cfg.n_layers // period, tuple(cfg.layer_kind(i) for i in range(period))
+    # homogeneous: every layer same kind (layer_kind may alternate only via
+    # moe_every — fold that into the unit if needed)
+    if cfg.n_experts > 0 and cfg.moe_every > 1:
+        assert cfg.n_layers % cfg.moe_every == 0
+        return (cfg.n_layers // cfg.moe_every,
+                tuple(cfg.layer_kind(i) for i in range(cfg.moe_every)))
+    return cfg.n_layers, (cfg.layer_kind(0),)
+
+
+def _init_layers(key, kinds, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    p: Dict[str, Any] = {}
+    for j, kind in enumerate(kinds):
+        k1, k2, key = jax.random.split(key, 3)
+        layer: Dict[str, Any] = {}
+        if kind in (LayerKind.ATTN, LayerKind.ATTN_MOE):
+            layer["attn"] = init_attn_params(k1, cfg, dtype)
+        else:
+            layer["ssm"] = init_ssm_params(k1, cfg, dtype)
+        if kind in (LayerKind.ATTN_MOE, LayerKind.SSM_MOE):
+            layer["moe"] = init_moe_params(k2, cfg, dtype)
+        elif cfg.d_ff > 0:
+            layer["ffn"] = init_ffn_params(k2, cfg, dtype,
+                                           gelu=cfg.mlp_gelu)
+        p[f"layer{j}"] = layer
+    return p
+
+
+def init_unit_params(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    head, reps, tail_kinds = _unit_split(cfg)
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"head": _init_layers(k1, head, cfg, dtype)}
+    if reps:
+        keys = jax.random.split(k2, reps)
+        p["tail"] = jax.vmap(
+            lambda k: _init_layers(k, tail_kinds, cfg, dtype))(keys)
+    return p
+
+
+def _unit_split(cfg: ModelConfig):
+    """(head_kinds, tail_reps, tail_kinds): multi-layer units run their first
+    `unit_head` layers directly and the periodic remainder under a nested
+    lax.scan — a while loop is the only construct whose buffer liveness the
+    scheduler provably bounds (python-looped layers schedule their remat
+    recomputes eagerly and peak at the SUM of the unit's working sets)."""
+    _, kinds = _unit_layout(cfg)
+    h = cfg.unit_head if cfg.unit_head else len(kinds)
+    head, tail = kinds[:h], kinds[h:]
+    if not tail:
+        return head, 0, ()
+    per = cfg.unit_tail_period
+    assert per > 0 and len(tail) % per == 0, (per, len(tail))
+    tail_kinds = tail[:per]
+    for i, k in enumerate(tail):
+        assert k == tail_kinds[i % per], "unit tail is not periodic"
+    return head, len(tail) // per, tail_kinds
+
+
+def _apply_layer(layer, x, cfg: ModelConfig, collect_cache: bool):
+    cache = None
+    if "attn" in layer:
+        if collect_cache:
+            x, (k, v) = attention_forward(layer["attn"], x, cfg,
+                                          causal=True, return_kv=True)
+            cache = fill_kv_cache(cfg, k, v)
+        else:
+            x = attention_forward(layer["attn"], x, cfg, causal=True)
+    if "ssm" in layer:
+        if collect_cache:
+            x, cache = ssm_forward(layer["ssm"], x, cfg, return_state=True)
+        else:
+            x = ssm_forward(layer["ssm"], x, cfg)
+    if "moe" in layer:
+        x = moe_ffn(layer["moe"], x, cfg)
+    if "ffn" in layer:
+        x = dense_ffn(layer["ffn"], x, cfg)
+    return x, cache
+
+
+def _apply_layers(p_layers, x, kinds, cfg: ModelConfig, collect_cache: bool,
+                  remat_each: bool):
+    caches: Dict[str, Any] = {}
+    layer_fn = functools.partial(_apply_layer, cfg=cfg,
+                                 collect_cache=collect_cache)
+    if remat_each:
+        layer_fn = jax.checkpoint(layer_fn)
+    for j, kind in enumerate(kinds):
+        x, c = layer_fn(p_layers[f"layer{j}"], x)
+        if collect_cache:
+            caches[f"layer{j}"] = c
+    return x, caches
+
+
+def apply_unit(p, x: jax.Array, cfg: ModelConfig, collect_cache: bool = False):
+    head, reps, tail_kinds = _unit_split(cfg)
+    x = constrain_bsd(x)
+    p = constrain_params(p)   # pins unit param (and cotangent) shardings
+    multi = (len(head) + reps * len(tail_kinds)) > 1
+    remat_each = cfg.remat and multi
+    x, cache = _apply_layers(p["head"], x, head, cfg, collect_cache,
+                             remat_each)
+    cache = {"head": cache}
+    if reps:
+        def tail_body(h, p_pair):
+            h = constrain_bsd(h)
+            p_pair = constrain_params(p_pair)
+            h, c = _apply_layers(p_pair, h, tail_kinds, cfg, collect_cache,
+                                 remat_each)
+            return constrain_bsd(h), (c if collect_cache else None)
+        x, tail_caches = jax.lax.scan(
+            tail_body, x, p["tail"], unroll=reps if cfg.unroll_scans else 1)
+        if collect_cache:
+            cache["tail"] = tail_caches
+    if collect_cache:
+        return x, cache
+    return x
+
+
+def _init_layer_caches(kinds, cfg: ModelConfig, batch, max_len, dtype):
+    c: Dict[str, Any] = {}
+    for j, kind in enumerate(kinds):
+        if kind in (LayerKind.ATTN, LayerKind.ATTN_MOE):
+            c[f"layer{j}"] = init_kv_cache(cfg, batch, max_len, dtype)
+        else:
+            c[f"layer{j}"] = init_ssm_cache(cfg, batch, dtype)
+    return c
+
+
+def init_unit_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    head, reps, tail_kinds = _unit_split(cfg)
+    c: Dict[str, Any] = {
+        "head": _init_layer_caches(head, cfg, batch, max_len, dtype)}
+    if reps:
+        per = [_init_layer_caches(tail_kinds, cfg, batch, max_len, dtype)
+               for _ in range(reps)]
+        c["tail"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+    return c
+
+
+def _decode_layers(p_layers, x, cache, kinds, cfg: ModelConfig):
+    new_cache = {}
+    for j, kind in enumerate(kinds):
+        layer = p_layers[f"layer{j}"]
+        key = f"layer{j}"
+        if "attn" in layer:
+            x, new_cache[key] = attention_decode(layer["attn"], x, cache[key], cfg)
+        if "ssm" in layer:
+            x, new_cache[key] = ssm_decode(layer["ssm"], x, cache[key], cfg)
+        if "moe" in layer:
+            x = moe_ffn(layer["moe"], x, cfg)
+        if "ffn" in layer:
+            x = dense_ffn(layer["ffn"], x, cfg)
+    return x, new_cache
+
+
+def apply_unit_decode(p, x: jax.Array, cache, cfg: ModelConfig):
+    head, reps, tail_kinds = _unit_split(cfg)
+    x, new_head = _decode_layers(p["head"], x, cache["head"], head, cfg)
+    new_cache = {"head": new_head}
+    if reps:
+        def body(h, inp):
+            pp, cc = inp
+            h, nc = _decode_layers(pp, h, cc, tail_kinds, cfg)
+            return h, nc
+        x, new_tail = jax.lax.scan(
+            body, x, (p["tail"], cache["tail"]),
+            unroll=reps if cfg.unroll_scans else 1)
+        new_cache["tail"] = new_tail
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder stack (Whisper)
+# ---------------------------------------------------------------------------
+
+def init_encoder_params(key, cfg: ModelConfig, dtype):
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {"attn": init_attn_params(k1, cfg, dtype),
+                "ffn": init_ffn_params(k2, cfg, dtype, gelu=True)}
+    keys = jax.random.split(key, cfg.encoder_layers)
+    return jax.vmap(one)(keys)
+
+
+def encode(p_enc, embeds: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Audio-frame embeddings (stub frontend output) -> encoder states."""
+    def body(h, p):
+        h = attention_forward(p["attn"], h, cfg, causal=False)
+        h = dense_ffn(p["ffn"], h, cfg)
+        return h, None
+    out, _ = jax.lax.scan(body, embeds, p_enc,
+                          unroll=cfg.encoder_layers if cfg.unroll_scans else 1)
+    return out
+
+
+def init_cross_params(key, cfg: ModelConfig, dtype):
+    def one(k):
+        return {"attn": init_attn_params(k, cfg, dtype)}
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.vmap(one)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    caches: Any                      # stacked unit caches
+    cross: Optional[Any] = None      # whisper: stacked cross KV (enc states)
+    enc_out: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+
+    # -- init ---------------------------------------------------------------
+    def init_params(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        n_units, _ = _unit_layout(cfg)
+        k_emb, k_blocks, k_head, k_enc, k_cross = jax.random.split(key, 5)
+        unit_keys = jax.random.split(k_blocks, n_units)
+        Vp = cfg.vocab_padded
+        params: Dict[str, Any] = {
+            "embed": embed_init(k_emb, (Vp, cfg.d_model), dtype),
+            "blocks": jax.vmap(lambda k: init_unit_params(k, cfg, dtype))(unit_keys),
+            "ln_f": jnp.ones((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(k_head, (cfg.d_model, Vp), dtype)
+        if cfg.encoder_layers:
+            params["encoder"] = init_encoder_params(k_enc, cfg, dtype)
+            params["cross"] = init_cross_params(k_cross, cfg, dtype)
+        return params
+
+    # -- helpers --------------------------------------------------------------
+    def _compute_dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    def _unroll(self):
+        n_units, _ = _unit_layout(self.cfg)
+        return n_units if self.cfg.unroll_scans else 1
+
+    def _cast(self, params):
+        dt = self._compute_dtype()
+        return jax.tree_util.tree_map(
+            lambda a: a.astype(dt) if a.dtype == jnp.float32 and a.ndim > 1 else a,
+            params)
+
+    def _head(self, params, h: jax.Array, mask_padded: bool = False) -> jax.Array:
+        cfg = self.cfg
+        h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+        logits = h @ params["embed"].T if cfg.tie_embeddings else h @ params["lm_head"]
+        if mask_padded and cfg.vocab_padded != cfg.vocab:
+            neg = jnp.asarray(-1e30, logits.dtype)
+            logits = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab, logits, neg)
+        return logits
+
+    # -- forward (train / prefill) -------------------------------------------
+    def forward(self, params, tokens: Optional[jax.Array] = None,
+                embeds: Optional[jax.Array] = None,
+                enc_embeds: Optional[jax.Array] = None) -> jax.Array:
+        cfg = self.cfg
+        params = self._cast(params)
+        if embeds is None:
+            embeds = params["embed"][tokens]
+        x = constrain_bsd(embeds.astype(self._compute_dtype()))
+
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = encode(params["encoder"], enc_embeds.astype(x.dtype), cfg)
+
+        unit_fn = functools.partial(apply_unit, cfg=cfg)
+        if cfg.remat:
+            unit_fn = jax.checkpoint(unit_fn)
+
+        if cfg.encoder_layers:
+            # decoder with interleaved cross-attention (per layer)
+            def body(h, ps):
+                p_unit, p_cross = ps
+                h = unit_fn(p_unit, h)
+                h = attention_forward(p_cross["attn"], h, cfg, causal=False,
+                                      kv_from=enc_out)
+                return h, None
+            x, _ = jax.lax.scan(body, x, (params["blocks"], params["cross"]),
+                                unroll=self._unroll())
+        else:
+            def body(h, p_unit):
+                return unit_fn(p_unit, h), None
+            x, _ = jax.lax.scan(body, x, params["blocks"],
+                                unroll=self._unroll())
+
+        return self._head(params, x)
+
+    # -- prefill (serving): trunk + cache fill + last-token logits -------------
+    def prefill(self, params, tokens: jax.Array,
+                enc_embeds: Optional[jax.Array] = None):
+        """tokens (B, S) -> (last logits (B, 1, V), DecodeState)."""
+        cfg = self.cfg
+        params = self._cast(params)
+        x = params["embed"][tokens].astype(self._compute_dtype())
+
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = encode(params["encoder"], enc_embeds.astype(x.dtype), cfg)
+
+        collect = functools.partial(apply_unit, cfg=cfg, collect_cache=True)
+        if cfg.remat:
+            collect = jax.checkpoint(collect)
+
+        if cfg.encoder_layers:
+            def body(h, ps):
+                p_unit, p_cross = ps
+                h, cache = collect(p_unit, h)
+                h = attention_forward(p_cross["attn"], h, cfg, causal=False,
+                                      kv_from=enc_out)
+                return h, cache
+            x, caches = jax.lax.scan(body, x, (params["blocks"], params["cross"]),
+                                     unroll=self._unroll())
+        else:
+            def body(h, p_unit):
+                return collect(p_unit, h)
+            x, caches = jax.lax.scan(body, x, params["blocks"],
+                                     unroll=self._unroll())
+
+        logits = self._head(params, x[:, -1:], mask_padded=True)
+        return logits, DecodeState(caches=caches, enc_out=enc_out)
+
+    # -- loss -----------------------------------------------------------------
+    def loss_fn(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        logits = self.forward(params, inputs,
+                              enc_embeds=batch.get("enc_embeds"))
+        logits = constrain(logits, "batch", None, "model")
+        # chunked CE over the sequence to bound the fp32 logit footprint
+        B, S, V = logits.shape
+        C = min(cfg.attn_chunk, S)
+        n = S // C if S % C == 0 else 1
+        C = S if S % C != 0 else C
+        lg = logits.reshape(B, n, C, V)
+        lb = labels.reshape(B, n, C)
+
+        vocab_mask = jnp.arange(V) < cfg.vocab
+
+        def chunk_loss(carry, inp):
+            lg_c, lb_c = inp            # (B, C, V), (B, C)
+            lg_c = lg_c.astype(jnp.float32)
+            lg_c = jnp.where(vocab_mask, lg_c, -1e30)
+            lse = jax.scipy.special.logsumexp(lg_c, axis=-1)
+            gold = jnp.take_along_axis(lg_c, lb_c[..., None], -1)[..., 0]
+            return carry + jnp.sum(lse - gold), None
+
+        total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                                (jnp.moveaxis(lg, 1, 0), jnp.moveaxis(lb, 1, 0)),
+                                unroll=n if cfg.unroll_scans else 1)
+        return total / (B * S)
+
+    # -- serving ----------------------------------------------------------------
+    def init_decode_state(self, batch: int, max_len: int,
+                          enc_embeds: Optional[jax.Array] = None,
+                          params=None) -> DecodeState:
+        cfg = self.cfg
+        dtype = self._compute_dtype()
+        n_units, _ = _unit_layout(cfg)
+        caches = [init_unit_cache(cfg, batch, max_len, dtype) for _ in range(n_units)]
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+        enc_out = None
+        if cfg.encoder_layers:
+            params = self._cast(params)
+            enc_out = encode(params["encoder"], enc_embeds.astype(dtype), cfg)
+        return DecodeState(caches=stacked, enc_out=enc_out)
+
+    def decode_step(self, params, token: jax.Array, state: DecodeState
+                    ) -> Tuple[jax.Array, DecodeState]:
+        """token: (B, 1) int32 -> (logits (B, 1, V), new state)."""
+        cfg = self.cfg
+        params = self._cast(params)
+        x = params["embed"][token].astype(self._compute_dtype())
+
+        if cfg.encoder_layers:
+            def body(h, inp):
+                (p_unit, p_cross), cache = inp
+                h, new_cache = apply_unit_decode(p_unit, h, cache, cfg)
+                h, _ = attention_decode(p_cross["attn"], h, _enc_kv(p_cross, state, cfg),
+                                        cfg, kv_from=state.enc_out)
+                return h, new_cache
+            x, new_caches = jax.lax.scan(
+                body, x, ((params["blocks"], params["cross"]), state.caches),
+                unroll=self._unroll())
+        else:
+            def body(h, inp):
+                p_unit, cache = inp
+                h, new_cache = apply_unit_decode(p_unit, h, cache, cfg)
+                return h, new_cache
+            x, new_caches = jax.lax.scan(body, x, (params["blocks"], state.caches),
+                                         unroll=self._unroll())
+
+        logits = self._head(params, x, mask_padded=True)
+        return logits, DecodeState(new_caches, state.cross, state.enc_out)
+
+
+def _enc_kv(p_cross, state: DecodeState, cfg: ModelConfig) -> KVCache:
+    """Build a pseudo-cache holding encoder K/V for cross-attention decode."""
+    src = state.enc_out
+    B, S, _ = src.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = (src @ p_cross["attn"]["wk"]).reshape(B, S, KV, hd)
+    v = (src @ p_cross["attn"]["wv"]).reshape(B, S, KV, hd)
+    if cfg.qkv_bias:
+        k = k + p_cross["attn"]["bk"].reshape(KV, hd)
+        v = v + p_cross["attn"]["bv"].reshape(KV, hd)
+    return KVCache(k=k, v=v, pos=jnp.zeros((), jnp.int32))

@@ -1,0 +1,4 @@
+from .adamw import AdamW, OptState, cosine_schedule
+from .compression import int8_allreduce_grads
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "int8_allreduce_grads"]

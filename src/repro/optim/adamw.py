@@ -1,0 +1,80 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping.
+
+Optimizer state is a pytree congruent with params (m, v in fp32) and shards
+identically to params under the FSDP policy — the ZeRO-3 layout falls out of
+GSPMD once the specs match.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: Optional[Any] = None     # callable step -> lr multiplier
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree_util.tree_map(zeros, params),
+                        v=jax.tree_util.tree_map(zeros, params))
+
+    def update(self, grads, state: OptState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            leaves = jax.tree_util.tree_leaves(grads)
+            gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        else:
+            gn = jnp.zeros(())
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self.lr * (self.schedule(step) if self.schedule else 1.0)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return m, v, (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        return new_p, OptState(step, new_m, new_v), gn
+
+
+def cosine_schedule(warmup: int, total: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return f

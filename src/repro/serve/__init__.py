@@ -1,0 +1,4 @@
+from .engine import ServeEngine
+from .kv_compaction import compact_kv_cache, dpp_select_tokens
+
+__all__ = ["ServeEngine", "compact_kv_cache", "dpp_select_tokens"]

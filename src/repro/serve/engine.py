@@ -1,0 +1,68 @@
+"""Serving engine: batched prefill + decode loop with optional DPP KV
+compaction, greedy/temperature sampling, and per-request bookkeeping."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import LM
+from ..config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    lm: LM
+    params: dict
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, t, e=None: self.lm.prefill(p, t, enc_embeds=e))
+        self._decode = jax.jit(self.lm.decode_step)
+        self._key = jax.random.PRNGKey(self.seed)
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 enc_embeds: Optional[np.ndarray] = None,
+                 stop_token: Optional[int] = None) -> Dict:
+        """prompts: (B, S_prompt) int32 -> dict with tokens + timing."""
+        t0 = time.perf_counter()
+        logits, state = self._prefill(self.params, jnp.asarray(prompts),
+                                      *( [jnp.asarray(enc_embeds)]
+                                         if enc_embeds is not None else []))
+        tok = self._sample(logits[:, -1])
+        jax.block_until_ready(tok)
+        t_prefill = time.perf_counter() - t0
+
+        out: List[jax.Array] = [tok]
+        done = np.zeros(prompts.shape[0], bool)
+        t1 = time.perf_counter()
+        for _ in range(max_new_tokens - 1):
+            logits, state = self._decode(self.params, tok[:, None], state)
+            tok = self._sample(logits[:, -1])
+            out.append(tok)
+            if stop_token is not None:
+                done |= np.asarray(tok) == stop_token
+                if done.all():
+                    break
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t1
+        tokens = np.stack([np.asarray(t) for t in out], axis=1)
+        return {"tokens": tokens,
+                "prefill_s": t_prefill,
+                "decode_s": t_decode,
+                "decode_tok_per_s": tokens.shape[0] * tokens.shape[1]
+                                    / max(t_decode, 1e-9)}

@@ -1,0 +1,71 @@
+"""DPP KV-cache compaction — Diversity-Networks ([26], the paper authors'
+companion work) applied to cached tokens.
+
+When a full-attention KV cache exceeds its budget, keep the most *diverse*
+key subset (plus a recency window): build an L-kernel over key vectors and
+take the greedy k-DPP MAP (Chen et al. 2018 fast greedy, the `greedy_map`
+Pallas kernel's op). Diversity-preserving eviction retains long-range anchors
+that recency-only (SWA) eviction drops.
+
+jit-able with static budget; runs per (layer, batch, kv-head) via vmap.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.sampling import greedy_map_kdpp
+from ..models.attention import KVCache
+
+
+def dpp_select_tokens(keys: jax.Array, budget: int, recency: int = 0,
+                      valid_len: int | None = None) -> jax.Array:
+    """Pick `budget` diverse token positions from keys (S, d).
+
+    recency: that many most-recent positions are always kept; the DPP picks
+    the remaining budget-recency from the older region.
+    Returns sorted (budget,) int32 positions.
+    """
+    S, d = keys.shape
+    k_dpp = budget - recency
+    kf = keys.astype(jnp.float32)
+    kf = kf / (jnp.linalg.norm(kf, axis=-1, keepdims=True) + 1e-6)
+    L = kf @ kf.T + 1e-4 * jnp.eye(S)
+    if valid_len is not None:
+        # exclude the recency window and invalid slots from DPP selection by
+        # zeroing their similarity rows (diag -> tiny conditional variance)
+        pos = jnp.arange(S)
+        sel_ok = pos < (valid_len - recency)
+        L = jnp.where(sel_ok[:, None] & sel_ok[None, :], L,
+                      jnp.where(jnp.eye(S, dtype=bool), 1e-6, 0.0))
+    picks = greedy_map_kdpp(L, k_dpp)
+    if recency > 0:
+        vl = S if valid_len is None else valid_len
+        recent = vl - 1 - jnp.arange(recency)
+        picks = jnp.concatenate([picks, recent.astype(jnp.int32)])
+    return jnp.sort(picks)
+
+
+def compact_kv_cache(cache: KVCache, budget: int, recency: int = 64
+                     ) -> Tuple[KVCache, jax.Array]:
+    """Compact one layer's cache (B, S, KV, hd) down to (B, budget, KV, hd).
+
+    Selection is per (batch, kv-head) on the key vectors; returns the new
+    cache and the kept positions (B, KV, budget) for position bookkeeping.
+    """
+    B, S, KV, hd = cache.k.shape
+
+    def one(keys):  # (S, hd)
+        return dpp_select_tokens(keys, budget, recency, valid_len=cache.pos)
+
+    picks = jax.vmap(jax.vmap(one, in_axes=1), in_axes=0)(cache.k)  # (B,KV,bud)
+
+    def gather(arr):
+        # arr (B, S, KV, hd), picks (B, KV, budget) -> (B, budget, KV, hd)
+        return jnp.take_along_axis(
+            arr, picks.transpose(0, 2, 1)[..., None], axis=1)
+
+    return KVCache(k=gather(cache.k), v=gather(cache.v), pos=cache.pos), picks

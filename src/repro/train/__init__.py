@@ -1,0 +1,4 @@
+from .steps import make_train_step, make_eval_step
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["make_train_step", "make_eval_step", "Trainer", "TrainerConfig"]

@@ -1,0 +1,75 @@
+"""Jit-able train / eval step builders."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import LM
+from ..optim import AdamW, OptState
+
+
+def make_train_step(lm: LM, opt: AdamW, microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatches > 1: gradient accumulation via lax.scan — bounds live
+    activation memory to one microbatch (the standard big-model knob; the
+    grad accumulator is fp32 and shards like params/opt state).
+    """
+    from ..distributed.constraints import constrain, constrain_params
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lm.loss_fn)(params, batch)
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc, loss_sum = carry
+                mb = jax.tree_util.tree_map(
+                    lambda x: constrain(x, "batch", *([None] * (x.ndim - 1))),
+                    mb)
+                loss, g = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                # pin the fp32 grad accumulator to the param layout — as a
+                # scan carry it otherwise materializes fully replicated.
+                return (constrain_params(acc), loss_sum + loss), None
+
+            zero = constrain_params(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), split)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+        new_params, new_opt, gnorm = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": new_opt.step.astype(jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(lm: LM):
+    def eval_step(params, batch):
+        return lm.loss_fn(params, batch)
+    return eval_step
+
+
+def make_serve_steps(lm: LM):
+    """(prefill_step, decode_step) for the serving path."""
+
+    def prefill_step(params, tokens, enc_embeds=None):
+        return lm.prefill(params, tokens, enc_embeds=enc_embeds)
+
+    def decode_step(params, token, state):
+        return lm.decode_step(params, token, state)
+
+    return prefill_step, decode_step

@@ -1,0 +1,49 @@
+"""Greedy SUKP subset clustering (paper Sec. 3.3)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import greedy_subset_clustering
+
+
+def test_respects_budget_and_covers(rng):
+    subs = [list(rng.choice(100, rng.integers(2, 12), replace=False))
+            for _ in range(40)]
+    cl = greedy_subset_clustering(subs, z=30)
+    assert len(cl.assignments) == 40
+    for u in cl.unions:
+        assert len(u) <= 30
+    for i, s in enumerate(subs):
+        assert set(s) <= cl.unions[cl.assignments[i]]
+
+
+def test_memory_savings_vs_dense():
+    """Clustered Θ storage must beat N^2 when subsets are localized."""
+    rng = np.random.default_rng(1)
+    N = 400
+    subs = []
+    for c in range(20):                      # 20 localized groups
+        base = c * 20
+        for _ in range(5):
+            subs.append(list(base + rng.choice(20, 8, replace=False)))
+    cl = greedy_subset_clustering(subs, z=25)
+    assert cl.memory_nonzeros() < N * N / 10
+
+
+def test_oversized_subset_raises():
+    with pytest.raises(ValueError):
+        greedy_subset_clustering([list(range(50))], z=10)
+
+
+@hypothesis.given(z=st.integers(8, 40), seed=st.integers(0, 999))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_partition_valid(z, seed):
+    rng = np.random.default_rng(seed)
+    subs = [list(rng.choice(60, rng.integers(1, min(z, 8) + 1), replace=False))
+            for _ in range(25)]
+    cl = greedy_subset_clustering(subs, z=z)
+    # every subset assigned exactly once, all unions within budget
+    assert sorted(set(cl.assignments)) == list(range(cl.m)) or cl.m >= 1
+    assert all(len(u) <= z for u in cl.unions)

@@ -1,0 +1,71 @@
+"""DPP semantics: likelihood vs enumeration, sampler exactness (paper Eq. 2,
+Alg. 2 / Sec. 4)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (KronDPP, SubsetBatch, log_likelihood, random_krondpp,
+                        sample_full_dpp, sample_krondpp)
+from repro.core.dpp import enumerate_probabilities, marginal_kernel
+
+
+def test_krondpp_loglik_matches_dense(rng):
+    m = random_krondpp(jax.random.PRNGKey(0), (3, 4))
+    L = m.full_matrix()
+    batch = SubsetBatch.from_lists([[0, 2, 5], [1], [3, 4, 7, 11]], k_max=5)
+    np.testing.assert_allclose(m.log_likelihood(batch),
+                               log_likelihood(L, batch), rtol=1e-4)
+
+
+def test_probabilities_normalize(rng):
+    m = random_krondpp(jax.random.PRNGKey(1), (2, 3))
+    probs = enumerate_probabilities(np.asarray(m.full_matrix()))
+    assert abs(sum(probs.values()) - 1.0) < 1e-4
+
+
+def test_kron_sampler_matches_marginals(rng):
+    m = random_krondpp(jax.random.PRNGKey(5), (2, 3))
+    L = np.asarray(m.full_matrix())
+    marg = np.diag(marginal_kernel(L))
+    S = 1500
+    cnt = np.zeros(6)
+    for _ in range(S):
+        for i in sample_krondpp(rng, m):
+            cnt[i] += 1
+    assert np.abs(cnt / S - marg).max() < 0.07
+
+
+def test_full_and_kron_samplers_agree_in_distribution(rng):
+    m = random_krondpp(jax.random.PRNGKey(3), (2, 3))
+    L = np.asarray(m.full_matrix())
+    sizes_full, sizes_kron = np.zeros(7), np.zeros(7)
+    for _ in range(800):
+        sizes_full[len(sample_full_dpp(rng, L))] += 1
+        sizes_kron[len(sample_krondpp(rng, m))] += 1
+    # subset-size distributions should agree
+    assert np.abs(sizes_full - sizes_kron).max() / 800 < 0.08
+
+
+@hypothesis.given(seed=st.integers(0, 2 ** 16))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_property_loglik_invariant_to_padding(seed):
+    """Identity-padding of subsets must not change the likelihood."""
+    key = jax.random.PRNGKey(seed)
+    m = random_krondpp(key, (3, 3))
+    subs = [[0, 4], [2, 5, 7]]
+    b1 = SubsetBatch.from_lists(subs, k_max=3)
+    b2 = SubsetBatch.from_lists(subs, k_max=6)
+    np.testing.assert_allclose(m.log_likelihood(b1), m.log_likelihood(b2),
+                               rtol=1e-4)
+
+
+def test_expected_size_formula(rng):
+    # E|Y| = sum λ/(1+λ)
+    m = random_krondpp(jax.random.PRNGKey(7), (2, 3))
+    lam = np.asarray(m.eigenvalues())
+    expect = (lam / (1 + lam)).sum()
+    tot = sum(len(sample_krondpp(rng, m)) for _ in range(1200)) / 1200
+    assert abs(tot - expect) < 0.25

@@ -1,0 +1,109 @@
+"""Kronecker algebra unit + property tests (paper Sec. 2)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kron as K
+
+
+def _pd(rng, n, dtype=jnp.float32):
+    X = rng.standard_normal((n, n)).astype(np.float32)
+    return jnp.asarray(X @ X.T + n * np.eye(n), dtype)
+
+
+def test_kron_matvec_identity(rng):
+    A, B = _pd(rng, 3), _pd(rng, 5)
+    L = jnp.kron(A, B)
+    x = jnp.asarray(rng.standard_normal(15), jnp.float32)
+    np.testing.assert_allclose(K.kron_matvec(A, B, x), L @ x, rtol=2e-4)
+
+
+def test_kron_matvec_batched(rng):
+    A, B = _pd(rng, 4), _pd(rng, 3)
+    L = jnp.kron(A, B)
+    X = jnp.asarray(rng.standard_normal((7, 12)), jnp.float32)
+    np.testing.assert_allclose(K.kron_matmat(A, B, X.T).T, X @ L.T, rtol=2e-4,
+                               atol=1e-4)
+
+
+def test_partial_traces(rng):
+    A, B = _pd(rng, 3), _pd(rng, 4)
+    L = jnp.kron(A, B)
+    np.testing.assert_allclose(K.partial_trace_1(L, 3, 4), jnp.trace(B) * A,
+                               rtol=1e-4)
+    np.testing.assert_allclose(K.partial_trace_2(L, 3, 4), jnp.trace(A) * B,
+                               rtol=1e-4)
+
+
+def test_partial_trace_positivity(rng):
+    # Prop 2.4: partial traces of PD matrices are PD
+    M = _pd(rng, 12)
+    for T in (K.partial_trace_1(M, 3, 4), K.partial_trace_2(M, 3, 4)):
+        ev = np.linalg.eigvalsh(np.asarray(T))
+        assert ev.min() > 0
+
+
+def test_kron_eigh_and_logdet(rng):
+    A, B = _pd(rng, 4), _pd(rng, 5)
+    L = jnp.kron(A, B)
+    d1 = jnp.linalg.eigvalsh(A)
+    d2 = jnp.linalg.eigvalsh(B)
+    lam = np.sort(np.asarray(K.kron_eigvals(d1, d2)))
+    np.testing.assert_allclose(lam, np.linalg.eigvalsh(np.asarray(L)),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(
+        K.logdet_I_plus_kron(d1, d2),
+        np.linalg.slogdet(np.asarray(L) + np.eye(20))[1], rtol=1e-4)
+
+
+def test_kron_submatrix(rng):
+    A, B = _pd(rng, 4), _pd(rng, 6)
+    L = jnp.kron(A, B)
+    idx = jnp.asarray([0, 3, 7, 11, 23])
+    np.testing.assert_allclose(K.kron_submatrix(A, B, idx),
+                               L[jnp.ix_(idx, idx)], rtol=1e-4)
+
+
+def test_kron_solve(rng):
+    A, B = _pd(rng, 3), _pd(rng, 4)
+    y = jnp.asarray(rng.standard_normal(12), jnp.float32)
+    x = K.kron_solve(jnp.linalg.cholesky(A), jnp.linalg.cholesky(B), y)
+    np.testing.assert_allclose(K.kron_matvec(A, B, x), y, rtol=1e-3, atol=1e-3)
+
+
+def test_nearest_kron_factors_exact(rng):
+    A, B = _pd(rng, 3), _pd(rng, 4)
+    L = jnp.kron(A, B)
+    U, s, V = K.nearest_kron_factors(L, 3, 4, iters=100)
+    np.testing.assert_allclose(s * jnp.kron(U, V), L, rtol=1e-3, atol=1e-3)
+
+
+@hypothesis.given(n1=st.integers(2, 5), n2=st.integers(2, 5),
+                  seed=st.integers(0, 2 ** 16))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_kron_structure(n1, n2, seed):
+    """Mixed-product + inverse + partial-trace identities hold for random PD
+    factors of any compatible size."""
+    rng = np.random.default_rng(seed)
+    A, B = _pd(rng, n1), _pd(rng, n2)
+    L = np.asarray(jnp.kron(A, B))
+    # (A ⊗ B)(A^{-1} ⊗ B^{-1}) = I  (Prop. 2.1(ii))
+    Linv = np.kron(np.linalg.inv(A), np.linalg.inv(B))
+    np.testing.assert_allclose(L @ Linv, np.eye(n1 * n2), atol=1e-2)
+    # Tr_1(L) = Tr(B) A
+    np.testing.assert_allclose(np.asarray(K.partial_trace_1(jnp.asarray(L), n1, n2)),
+                               np.trace(B) * np.asarray(A), rtol=1e-3, atol=1e-3)
+
+
+@hypothesis.given(n1=st.integers(2, 4), n2=st.integers(2, 4),
+                  seed=st.integers(0, 2 ** 16))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_property_vlp_roundtrip(n1, n2, seed):
+    rng = np.random.default_rng(seed)
+    M = jnp.asarray(rng.standard_normal((n1 * n2, n1 * n2)), jnp.float32)
+    R = K.vlp_rearrange(M, n1, n2)
+    np.testing.assert_allclose(K.vlp_unrearrange(R, n1, n2), M, rtol=1e-6)

@@ -1,0 +1,117 @@
+"""Learning algorithms: ascent guarantees (Thm. 3.2), Appendix-B update
+equivalence, baselines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KronDPP, SubsetBatch, fit_em, fit_joint_picard,
+                        fit_krk_picard, fit_picard, random_krondpp)
+from repro.core import kron as K
+from repro.core.dpp import picard_delta
+from repro.core.krk_picard import (AC_from_dense_theta, accumulate_AC,
+                                   krk_picard_step, theta_matrix_kron)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(2)
+    true = random_krondpp(jax.random.PRNGKey(7), (4, 5))
+    from repro.core import sample_krondpp
+    subs = [s for s in (sample_krondpp(rng, true) for _ in range(50)) if s]
+    kmax = max(len(s) for s in subs)
+    return SubsetBatch.from_lists(subs, k_max=kmax)
+
+
+def test_AC_routes_agree(data):
+    m = random_krondpp(jax.random.PRNGKey(3), (4, 5))
+    L1, L2 = m.factors
+    A1, C1 = accumulate_AC(L1, L2, data)
+    A2, C2 = AC_from_dense_theta(theta_matrix_kron(L1, L2, data), L1, L2)
+    np.testing.assert_allclose(A1, A2, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(C1, C2, rtol=1e-3, atol=1e-4)
+
+
+def test_krk_update_matches_naive_dense(data):
+    """Appendix-B efficient updates == direct Tr_i((.)(LΔL)) computation."""
+    m = random_krondpp(jax.random.PRNGKey(3), (4, 5))
+    L1, L2 = m.factors
+    L = jnp.kron(L1, L2)
+    L1n, L2n = krk_picard_step(L1, L2, data, 1.0)
+
+    delta = picard_delta(L, data)
+    X1 = K.partial_trace_1(jnp.kron(jnp.eye(4), jnp.linalg.inv(L2))
+                           @ (L @ delta @ L), 4, 5) / 5
+    np.testing.assert_allclose(L1n, L1 + X1, rtol=2e-2, atol=2e-2)
+
+    Lmid = jnp.kron(L1n, L2)
+    d2 = picard_delta(Lmid, data)
+    X2 = K.partial_trace_2(jnp.kron(jnp.linalg.inv(L1n), jnp.eye(5))
+                           @ (Lmid @ d2 @ Lmid), 4, 5) / 4
+    np.testing.assert_allclose(L2n, L2 + X2, rtol=2e-2, atol=2e-2)
+
+
+def test_krk_monotonic_ascent(data):
+    init = random_krondpp(jax.random.PRNGKey(11), (4, 5))
+    res = fit_krk_picard(init, data, iters=8, a=1.0)
+    lls = np.asarray(res.log_likelihoods)
+    assert np.all(np.diff(lls) > -1e-3), lls
+
+
+def test_krk_iterates_positive_definite(data):
+    init = random_krondpp(jax.random.PRNGKey(11), (4, 5))
+    res = fit_krk_picard(init, data, iters=6, a=1.0, track_ll=False)
+    for f in res.model.factors:
+        assert np.linalg.eigvalsh(np.asarray(f)).min() > 0
+
+
+def test_krk_stochastic_improves(data):
+    init = random_krondpp(jax.random.PRNGKey(13), (4, 5))
+    res = fit_krk_picard(init, data, iters=10, a=0.7, minibatch_size=8, seed=1)
+    assert res.log_likelihoods[-1] > res.log_likelihoods[0]
+
+
+def test_krk_dense_theta_route(data):
+    init = random_krondpp(jax.random.PRNGKey(17), (4, 5))
+    r1 = fit_krk_picard(init, data, iters=3, use_dense_theta=True)
+    r2 = fit_krk_picard(init, data, iters=3, use_dense_theta=False)
+    np.testing.assert_allclose(r1.log_likelihoods, r2.log_likelihoods,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_picard_baseline_ascent(data):
+    init = random_krondpp(jax.random.PRNGKey(11), (4, 5))
+    res = fit_picard(init.full_matrix(), data, iters=6)
+    assert np.all(np.diff(res.log_likelihoods) > -1e-3)
+
+
+def test_joint_picard_runs_and_stays_pd(data):
+    init = random_krondpp(jax.random.PRNGKey(19), (4, 5))
+    res = fit_joint_picard(init, data, iters=4)
+    for f in res.model.factors:
+        assert np.linalg.eigvalsh(np.asarray(f)).min() > 0
+    assert res.log_likelihoods[-1] > res.log_likelihoods[0] - 0.5
+
+
+def test_em_baseline_improves(data):
+    init = random_krondpp(jax.random.PRNGKey(11), (4, 5))
+    res = fit_em(init.full_matrix(), data, iters=5, lr=1e-3)
+    assert res.log_likelihoods[-1] > res.log_likelihoods[0]
+
+
+def test_em_e_step_sums_to_subset_size(data):
+    from repro.core.em import e_step
+    init = random_krondpp(jax.random.PRNGKey(23), (4, 5))
+    lam, V = jnp.linalg.eigh(init.full_matrix())
+    q = e_step(jnp.maximum(lam, 1e-6), V, data)
+    np.testing.assert_allclose(q.sum(-1), data.sizes().astype(jnp.float32),
+                               rtol=1e-2)
+
+
+def test_step_size_above_one_speeds_up(data):
+    """Paper Sec. 3.1.1: a>1 converges faster (no monotonicity guarantee)."""
+    init = random_krondpp(jax.random.PRNGKey(29), (4, 5))
+    r1 = fit_krk_picard(init, data, iters=5, a=1.0)
+    r2 = fit_krk_picard(init, data, iters=5, a=1.5)
+    assert r2.log_likelihoods[-1] >= r1.log_likelihoods[-1] - 0.05
