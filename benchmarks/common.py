@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import List
 
@@ -9,6 +11,35 @@ import jax
 import numpy as np
 
 from repro.core import KronDPP, SubsetBatch, random_krondpp, sample_krondpp
+
+
+def rescale_expected_size(dpp: KronDPP, target: float) -> KronDPP:
+    """Scale the factors so E|Y| = sum λ/(1+λ) hits `target` (bisection on
+    the product spectrum). Raw U[0, sqrt(2)] kernels have E|Y| ~ N, which
+    buries any setup-cost comparison under the shared O(N k^3) selection."""
+    import jax.numpy as jnp
+    lam = np.asarray(dpp.eigenvalues(), np.float64)
+    g_lo, g_hi = 1e-12, 1e6
+    for _ in range(200):
+        g = np.sqrt(g_lo * g_hi)
+        if (g * lam / (1 + g * lam)).sum() > target:
+            g_hi = g
+        else:
+            g_lo = g
+    return KronDPP(tuple(jnp.asarray(f) * (g ** (1.0 / dpp.m))
+                         for f in dpp.factors))
+
+
+def json_report(name: str, payload: dict) -> str:
+    """One JSON line per benchmark result, machine-readable for CI trend
+    tracking. Also appended to $BENCH_JSON (jsonl) when set."""
+    line = json.dumps({"bench": name, **payload}, sort_keys=True)
+    print(line)
+    path = os.environ.get("BENCH_JSON")
+    if path:
+        with open(path, "a") as f:
+            f.write(line + "\n")
+    return line
 
 
 def paper_synthetic_data(key, sizes, n_subsets, size_lo, size_hi, seed=0

@@ -1,0 +1,78 @@
+"""Paper Sec. 4, batched: host-loop vs device-resident sampler throughput.
+
+The existing paper_sec4_sampling benchmark shows the *asymptotic* win
+(factor eigh vs full eigh). This one measures the production win the
+`repro.sampling` subsystem exists for: per-request host sampling vs one
+jit+vmap device call per batch, with the eigendecomposition amortized in
+the SpectralCache. Reported as samples/s and speedup across batch sizes;
+compile time is excluded (one warmup call per shape, as in serving).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import random_krondpp, sample_krondpp
+from repro.sampling import SpectralCache, sample_krondpp_batched
+from .common import json_report, rescale_expected_size
+
+SIZES = (32, 32)          # N = 1024, the m=2 O(N^{3/2}) regime
+TARGET_E = 12.0
+BATCHES = (1, 8, 32, 128)
+HOST_SAMPLES = 8
+
+
+def run(seed: int = 0) -> dict:
+    dpp = rescale_expected_size(
+        random_krondpp(jax.random.PRNGKey(seed), SIZES), TARGET_E)
+
+    # host loop: the pre-subsystem production path (eigh every call)
+    rng = np.random.default_rng(seed)
+    sample_krondpp(rng, dpp)                    # numpy warmup (BLAS init)
+    t0 = time.perf_counter()
+    for _ in range(HOST_SAMPLES):
+        sample_krondpp(rng, dpp)
+    host_per_sample = (time.perf_counter() - t0) / HOST_SAMPLES
+
+    cache = SpectralCache()
+    spec = cache.spectrum(dpp)
+    k_max = spec.suggested_k_max()
+    rows = []
+    for batch in BATCHES:
+        key = jax.random.PRNGKey(seed + batch)
+        out = sample_krondpp_batched(key, spec, k_max, batch)   # compile
+        jax.block_until_ready(out)
+        reps = max(1, 64 // batch)
+        t0 = time.perf_counter()
+        for r in range(reps):
+            out = sample_krondpp_batched(
+                jax.random.fold_in(key, r), spec, k_max, batch)
+        jax.block_until_ready(out)
+        dev_per_sample = (time.perf_counter() - t0) / (reps * batch)
+        rows.append({
+            "batch": batch,
+            "host_us_per_sample": host_per_sample * 1e6,
+            "device_us_per_sample": dev_per_sample * 1e6,
+            "device_samples_per_s": 1.0 / dev_per_sample,
+            "speedup": host_per_sample / dev_per_sample,
+        })
+    return {"N": int(np.prod(SIZES)), "k_max": int(k_max),
+            "E_size": TARGET_E, "rows": rows}
+
+
+def main():
+    res = run()
+    for r in res["rows"]:
+        print(f"batched_sampling,b{r['batch']},"
+              f"{r['device_us_per_sample']:.0f},"
+              f"{r['device_samples_per_s']:.0f} samples/s; "
+              f"{r['speedup']:.1f}x vs host loop "
+              f"({r['host_us_per_sample']:.0f}us/sample)")
+    json_report("paper_sec4_batched_sampling", res)
+
+
+if __name__ == "__main__":
+    main()

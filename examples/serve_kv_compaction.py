@@ -1,6 +1,9 @@
 """Serve a small model with batched requests + DPP KV-cache compaction:
 after prefill, the cache is compacted to a diversity-preserving subset
 (Diversity Networks [26] applied to tokens) before decode continues.
+Compaction here uses the *exact* k-DPP sampler from the batched
+``repro.sampling`` subsystem (method="sample") rather than the
+deterministic greedy MAP, de-biasing eviction across heads.
 
     PYTHONPATH=src python examples/serve_kv_compaction.py
 """
@@ -37,13 +40,16 @@ budget = 24
 from repro.models.attention import KVCache
 
 caches = state.caches
+ckey = jax.random.PRNGKey(42)
 new_head = {}
 for name, c in caches["head"].items():
     if isinstance(c, KVCache):
         ks, vs, pos = [], [], c.pos
         for u in range(c.k.shape[0]):
+            ckey, sub = jax.random.split(ckey)
             nc, _ = compact_kv_cache(
-                KVCache(c.k[u], c.v[u], c.pos[u]), budget, recency=8)
+                KVCache(c.k[u], c.v[u], c.pos[u]), budget, recency=8,
+                method="sample", key=sub)
             ks.append(nc.k)
             vs.append(nc.v)
         new_head[name] = KVCache(jnp.stack(ks), jnp.stack(vs), c.pos)
@@ -61,4 +67,5 @@ for _ in range(12):
 print(f"compacted decode: cache {S} -> {budget} slots/layer; "
       f"generated {np.stack(outs, 1).shape} tokens")
 print("note: compaction keeps a diverse + recent token subset per kv-head "
-      "(greedy k-DPP MAP, the greedy_map Pallas kernel)")
+      "(exact k-DPP sample via repro.sampling; method='map' gives the "
+      "deterministic greedy_map Pallas-kernel path)")

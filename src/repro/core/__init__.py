@@ -15,13 +15,15 @@ from .krk_picard import (krk_picard_step, fit_krk_picard, accumulate_AC,
 from .picard import picard_step, fit_picard
 from .joint_picard import joint_picard_step, fit_joint_picard
 from .em import fit_em
-from .sampling import sample_full_dpp, sample_krondpp, greedy_map_kdpp
+from .sampling import (sample_full_dpp, sample_krondpp,
+                       sample_krondpp_batch, greedy_map_kdpp)
 from .clustering import greedy_subset_clustering
 
 __all__ = [
     "KronDPP", "SubsetBatch", "random_krondpp", "log_likelihood", "picard_delta",
     "krk_picard_step", "fit_krk_picard", "accumulate_AC", "AC_from_dense_theta",
     "picard_step", "fit_picard", "joint_picard_step", "fit_joint_picard",
-    "fit_em", "sample_full_dpp", "sample_krondpp", "greedy_map_kdpp",
+    "fit_em", "sample_full_dpp", "sample_krondpp", "sample_krondpp_batch",
+    "greedy_map_kdpp",
     "greedy_subset_clustering", "kron", "dpp", "sampling", "clustering",
 ]

@@ -25,6 +25,23 @@ from .dpp import SubsetBatch
 from .krk_picard import _alpha_beta, _subset_AC
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions: older releases ship it as
+    jax.experimental.shard_map, and the replication-check kwarg was renamed
+    check_rep -> check_vma independently of the top-level promotion, so
+    probe the kwarg rather than tying it to where the symbol lives."""
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 def make_distributed_krk_step(mesh: Mesh, data_axes=("data",),
                               shard_updates: bool = True,
                               fresh_spectrum: bool = True):
@@ -63,10 +80,10 @@ def make_distributed_krk_step(mesh: Mesh, data_axes=("data",),
         n_global = jax.lax.psum(jnp.asarray(n_local, jnp.float32), data_axes)
         return A / n_global, C / n_global
 
-    shard_AC = jax.shard_map(
-        local_AC, mesh=mesh,
+    shard_AC = _shard_map(
+        local_AC, mesh,
         in_specs=(spec_r, spec_r, spec_b, spec_b),
-        out_specs=(spec_r, spec_r), check_vma=False)
+        out_specs=(spec_r, spec_r))
 
     def update_factor(L, X, P_, d, coef, a, N_other):
         """L + a/N_other (L X L - P diag(coef) P^T), matmuls TP-sharded."""

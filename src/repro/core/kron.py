@@ -127,6 +127,19 @@ def split_indices(idx: jax.Array, n2: int) -> Tuple[jax.Array, jax.Array]:
     return idx // n2, idx % n2
 
 
+def split_indices_multi(idx: jax.Array, sizes: Sequence[int]
+                        ) -> Tuple[jax.Array, ...]:
+    """Row-major mixed-radix decomposition for any factor count — THE
+    index-order convention; KronDPP.split_indices and the sampling
+    subsystem both delegate here so they cannot drift apart."""
+    parts = []
+    rem = idx
+    for s in sizes[::-1]:
+        parts.append(rem % s)
+        rem = rem // s
+    return tuple(parts[::-1])
+
+
 def kron_submatrix(L1: jax.Array, L2: jax.Array, idx: jax.Array) -> jax.Array:
     """``(L1 ⊗ L2)[idx, idx]`` gathered in O(k^2), never materializing L."""
     r, u = split_indices(idx, L2.shape[0])

@@ -56,12 +56,7 @@ class KronDPP:
     # -- index decomposition -----------------------------------------------
     def split_indices(self, idx: jax.Array) -> Tuple[jax.Array, ...]:
         """Global index -> per-factor indices (row-major mixed radix)."""
-        parts = []
-        rem = idx
-        for s in self.sizes[::-1]:
-            parts.append(rem % s)
-            rem = rem // s
-        return tuple(parts[::-1])
+        return kron.split_indices_multi(idx, self.sizes)
 
     def submatrix(self, idx: jax.Array) -> jax.Array:
         """(L)[idx, idx] in O(k^2 m) without materializing L."""

@@ -4,9 +4,16 @@ Full kernel:   O(N^3 + N k^3)   (eigendecomposition dominates)
 KronDPP m=2:   O(N^{3/2} + N k^3)
 KronDPP m=3:   O(N + N k^3) = O(N k^3)
 
-The phase-2 selection loop is shared. It is a host-side sampler (used by the
-data pipeline off the accelerator critical path), so it runs eagerly with
-numpy-style control flow; the per-step linear algebra is jax.
+The phase-2 selection loop is shared. It is a host-side sampler that runs
+eagerly with numpy-style control flow; the per-step linear algebra is jax.
+
+.. deprecated::
+    The host loop is kept as the *reference oracle* (tests validate the
+    device samplers against it). Production callers should use the
+    device-resident batched subsystem in :mod:`repro.sampling`
+    (``SamplingService`` / ``sample_krondpp_batched``), which amortizes
+    the factor eigendecompositions and draws whole batches in one
+    jit+vmap device call; ``sample_krondpp_batch`` below delegates there.
 """
 
 from __future__ import annotations
@@ -104,6 +111,23 @@ def sample_krondpp(rng: np.random.Generator, dpp: KronDPP) -> List[int]:
     return _phase2_select(rng, V)
 
 
+def sample_krondpp_batch(key: jax.Array, dpp: KronDPP, num_samples: int,
+                         k_max: Optional[int] = None) -> List[List[int]]:
+    """Batched device sampling — delegates to :mod:`repro.sampling`.
+
+    One jit+vmap device call for all ``num_samples`` draws, factor
+    eigendecompositions amortized through the process-wide SpectralCache.
+    Prefer constructing a ``repro.sampling.SamplingService`` directly for
+    repeated use; this wrapper exists so ``core``-level callers migrate
+    without importing the subsystem.
+    """
+    from ..sampling import (default_cache, picks_to_lists,
+                            sample_krondpp_batched)
+    spec = default_cache().spectrum(dpp)
+    picks, _ = sample_krondpp_batched(key, spec, k_max, num_samples)
+    return picks_to_lists(picks)
+
+
 # ---------------------------------------------------------------------------
 # Greedy MAP (used by the serving-side KV compaction; jit-able, fixed k)
 # ---------------------------------------------------------------------------
@@ -118,14 +142,23 @@ def greedy_map_kdpp(L: jax.Array, k: int) -> jax.Array:
     """
     N = L.shape[0]
 
+    from ..kernels.ref import degeneracy_eps
+    eps = degeneracy_eps(L)
+
     def body(state, _):
         d, C, chosen_mask, t = state
         scores = jnp.where(chosen_mask, -jnp.inf, d)
         j = jnp.argmax(scores)
-        dj = jnp.maximum(d[j], 1e-12)
+        # When the conditional variance collapses (k beyond numerical rank),
+        # 1/sqrt(d_j) explodes, d goes NaN, and every later pick is poisoned.
+        # Clamp the divisor and zero the update for degenerate picks so they
+        # stay valid indices and leave the remaining state intact.
+        ok = d[j] > eps
+        dj = jnp.maximum(d[j], eps)
         # e = (L[:, j] - C @ C[j]) / sqrt(d_j)
         e = (L[:, j] - C @ C[j]) / jnp.sqrt(dj)
-        d_new = d - e * e
+        e = jnp.where(ok, e, 0.0)
+        d_new = jnp.maximum(d - e * e, 0.0)
         C_new = jax.lax.dynamic_update_index_in_dim(C.T, e, t, axis=0).T
         return (d_new, C_new, chosen_mask.at[j].set(True), t + 1), j
 

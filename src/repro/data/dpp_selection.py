@@ -4,7 +4,16 @@ data-pipeline feature.
 Ground set = the N = N1 x N2 training documents, factored as N1 shards x N2
 offsets. L1 models inter-shard similarity (e.g. topic centroids), L2
 intra-shard similarity. Exact sampling costs O(N1^3 + N2^3 + N k^3) per batch
-(paper Sec. 4) — host-side, overlapped with device compute by the pipeline.
+(paper Sec. 4).
+
+Two backends:
+  "device" (default) — the batched subsystem (``repro.sampling``): the
+      factor eigendecompositions are cached once in a SpectralCache and
+      ``prefetch`` samples are drawn per vmapped device call into a FIFO
+      buffer, so steady-state selection is one device call every
+      ``prefetch`` batches.
+  "host" — the original per-call numpy sampler, kept as the reference
+      oracle.
 
 The factor kernels can be LEARNED from batches that trained well (any subset
 signal) with KrK-Picard — `fit_from_subsets` wires that in.
@@ -13,7 +22,7 @@ signal) with KrK-Picard — `fit_from_subsets` wires that in.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 import jax
@@ -38,10 +47,17 @@ class DPPBatchSelector:
     dpp: KronDPP
     n1: int
     n2: int
+    backend: str = "device"      # "device" (batched subsystem) or "host"
+    prefetch: int = 16           # samples per coalesced device call
+
+    def __post_init__(self):
+        self._service = None
+        self._buffer: List[List[int]] = []
 
     @staticmethod
     def from_features(doc_features: np.ndarray, n1: int, n2: int,
-                      scale: float = 1.0) -> "DPPBatchSelector":
+                      scale: float = 1.0, backend: str = "device"
+                      ) -> "DPPBatchSelector":
         """Build factor kernels from doc features (n1*n2, d).
 
         L1: RBF over shard centroids; L2: RBF over within-shard mean offsets.
@@ -51,12 +67,31 @@ class DPPBatchSelector:
         L2 = _rbf_kernel(F.mean(axis=0)) * scale
         return DPPBatchSelector(
             KronDPP((jnp.asarray(L1, jnp.float32), jnp.asarray(L2, jnp.float32))),
-            n1, n2)
+            n1, n2, backend=backend)
+
+    # -- sampling ------------------------------------------------------------
+    def reset(self) -> None:
+        """Drop buffered samples (pipeline restore calls this so replayed
+        draws regenerate identically from the replayed rng stream)."""
+        self._buffer = []
+        self._service = None
+
+    def _draw_subset(self, rng: np.random.Generator) -> np.ndarray:
+        if self.backend == "host":
+            return np.asarray(sample_krondpp(rng, self.dpp), np.int64)
+        if not self._buffer:
+            if self._service is None:
+                from ..sampling import SamplingService
+                # Service PRNG is derived from the pipeline rng stream, so
+                # restore/replay reproduces the same device draws.
+                self._service = SamplingService(
+                    self.dpp, seed=int(rng.integers(2 ** 31)))
+            self._buffer = self._service.sample(self.prefetch)
+        return np.asarray(self._buffer.pop(0), np.int64)
 
     def select(self, rng: np.random.Generator, batch_size: int) -> np.ndarray:
         """Exact KronDPP sample, topped up / truncated to batch_size."""
-        idx = sample_krondpp(rng, self.dpp)
-        idx = np.asarray(idx, np.int64)
+        idx = self._draw_subset(rng)
         if len(idx) > batch_size:
             idx = rng.permutation(idx)[:batch_size]
         elif len(idx) < batch_size:
@@ -65,6 +100,7 @@ class DPPBatchSelector:
             idx = np.concatenate([idx, extra])
         return idx
 
+    # -- learning ------------------------------------------------------------
     def fit_from_subsets(self, subsets: Sequence[Sequence[int]],
                          iters: int = 5, a: float = 1.0) -> "DPPBatchSelector":
         """Adapt the kernels to observed 'good' batches via KrK-Picard."""

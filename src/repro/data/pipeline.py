@@ -55,6 +55,10 @@ class TokenPipeline:
         self.seed = state["seed"]
         self._rng = np.random.default_rng(self.seed)
         self._step = 0
+        if self.selector is not None and hasattr(self.selector, "reset"):
+            # device-backed selectors buffer prefetched samples; drop them so
+            # the replayed rng stream regenerates identical draws
+            self.selector.reset()
         while self._step < state["step"]:
             self._draw()          # replay for determinism
 

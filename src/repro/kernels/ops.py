@@ -58,6 +58,25 @@ def kron_matvec(A: jax.Array, B: jax.Array, X: jax.Array,
     return Y[:batch].reshape(batch, P1, P2)[:, :N1, :N2].reshape(batch, N1 * N2)
 
 
+def kron_eigvec_batch(P1: jax.Array, P2: jax.Array, i: jax.Array,
+                      j: jax.Array, force_pallas: bool = False) -> jax.Array:
+    """Columns of P1 ⊗ P2 at index pairs (i, j) — batched lazy eigenvector
+    assembly for the sampling subsystem. i, j: (k,) int32. Returns (N, k).
+
+    Identity: (P1 ⊗ P2) vec(e_i e_j^T) = vec(P1[:, i] P2[:, j]^T), so on
+    TPU this reuses the ``kron_matvec`` Pallas path on the one-hot batch
+    (two MXU matmuls); elsewhere the gather + outer product costs O(N k)
+    instead of the matmul route's O(N (N1+N2) k).
+    """
+    N1, N2 = P1.shape[0], P2.shape[0]
+    if _on_tpu() or force_pallas:
+        E = jnp.zeros((i.shape[0], N1 * N2), P1.dtype)
+        E = E.at[jnp.arange(i.shape[0]), i * N2 + j].set(1.0)
+        return kron_matvec(P1, P2, E, force_pallas=force_pallas).T
+    return (P1[:, i][:, None, :] * P2[:, j][None, :, :]).reshape(
+        N1 * N2, i.shape[0])
+
+
 # ---------------------------------------------------------------------------
 # partial traces (KrK-Picard batch route)
 # ---------------------------------------------------------------------------
@@ -113,12 +132,22 @@ def greedy_map_kdpp(L: jax.Array, k: int, force_pallas: bool = False) -> jax.Arr
     """
     N = L.shape[0]
 
+    eps = ref.degeneracy_eps(L)
+
     def body(state, t):
         d, C, chosen = state
         scores = jnp.where(chosen, -jnp.inf, d)
         j = jnp.argmax(scores)
-        e, d_new = greedy_map_update(
-            L[:, j], C, C[j], d[j][None], d, force_pallas=force_pallas)
+        # Degenerate conditional variance (k beyond numerical rank): a raw
+        # 1/sqrt(d_j) blows up e and poisons every later pick with NaN.
+        # Clamp the divisor and zero the update so the pick stays a valid
+        # index and the remaining state is untouched.
+        ok = d[j] > eps
+        e, d_upd = greedy_map_update(
+            L[:, j], C, C[j], jnp.maximum(d[j], eps)[None], d,
+            force_pallas=force_pallas)
+        e = jnp.where(ok, e, 0.0)
+        d_new = jnp.where(ok, jnp.maximum(d_upd, 0.0), d)
         C_new = jax.lax.dynamic_update_index_in_dim(C.T, e, t, axis=0).T
         return (d_new, C_new, chosen.at[j].set(True)), j
 

@@ -30,3 +30,12 @@ def partial_trace_C_ref(theta4: jax.Array, L1: jax.Array) -> jax.Array:
 def greedy_map_update_ref(lcol, C, cj, dj, d):
     e = (lcol - C @ cj) / jnp.sqrt(jnp.maximum(dj[0], 1e-12))
     return e.astype(jnp.float32), (d - e * e).astype(jnp.float32)
+
+
+def degeneracy_eps(L: jax.Array) -> jax.Array:
+    """Conditional-variance collapse threshold for greedy MAP, relative to
+    the kernel's own scale (greedy MAP is scale-equivariant, so an absolute
+    cutoff would zero every update for small-magnitude kernels). Shared by
+    the reference and Pallas-routed greedy_map_kdpp implementations so the
+    two paths cannot drift."""
+    return 1e-8 * jnp.maximum(jnp.max(jnp.diagonal(L)), 1e-30)

@@ -1,0 +1,41 @@
+"""repro.sampling — device-resident batched exact DPP sampling (Sec. 4).
+
+The paper's asymptotic win (O(N^{3/2}) exact sampling for m=2, O(N) for
+m=3) turned into measured throughput: the whole pipeline — spectrum draw,
+lazy Kronecker eigenvector assembly, projection selection — is fixed-shape
+jax, jit-compiled and vmapped over PRNG keys. The host-side numpy sampler
+in ``core.sampling`` remains as the reference oracle.
+
+Module map
+----------
+spectral.py  ``FactorSpectrum`` (per-factor eigendecompositions, product
+             spectrum helpers) and ``SpectralCache`` — the O(sum N_i^3)
+             eigh keyed on factor identity so repeated sampling against
+             one kernel pays for it once.
+batched.py   ``sample_krondpp_batched`` — phase-1 Bernoulli over the
+             factored spectrum, compaction to a static (k_max,) slot
+             array, lazy eigenvector gather, and the QR-free masked-scan
+             projection-selection loop (phase 2). Also the shared
+             fixed-shape building blocks.
+kdpp.py      ``sample_kdpp_batched`` / ``sample_kdpp_dense`` — exactly-k
+             sampling via the log-space elementary-symmetric-polynomial
+             recursion on the factored spectrum.
+service.py   ``SamplingService`` — micro-batching front-end (submit →
+             coalesce → one vmapped device call → scatter) used by the
+             data pipeline and serving layers.
+"""
+
+from .spectral import (FactorSpectrum, SpectralCache, default_cache,
+                       log_product_spectrum)
+from .batched import (compile_cache_size, picks_to_lists,
+                      sample_krondpp_batched)
+from .kdpp import log_esp_table, sample_kdpp_batched, sample_kdpp_dense
+from .service import SamplingService, SampleTicket
+
+__all__ = [
+    "FactorSpectrum", "SpectralCache", "default_cache",
+    "log_product_spectrum",
+    "sample_krondpp_batched", "picks_to_lists", "compile_cache_size",
+    "log_esp_table", "sample_kdpp_batched", "sample_kdpp_dense",
+    "SamplingService", "SampleTicket",
+]

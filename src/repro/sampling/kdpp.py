@@ -1,0 +1,112 @@
+"""Exact k-DPP sampling on the factored spectrum (Kulesza & Taskar Alg. 8).
+
+A k-DPP conditions the DPP on |Y| = k. Phase 1 becomes a sequential draw
+over the N eigenvalues using elementary symmetric polynomials (ESPs):
+processing eigenvalues from last to first, include eigenvalue n with
+
+    P(include) = λ_n · e_{k-1}(λ_1..λ_{n-1}) / e_k(λ_1..λ_n),
+
+decrementing k on inclusion — exactly k eigenvectors survive. The ESP
+table e_j(λ_1..λ_n) is the O(N k) recursion e_j^n = e_j^{n-1} +
+λ_n e_{j-1}^{n-1}, computed in log-space (ESPs of 10^4+ eigenvalues
+overflow float range long before N does). Phase 2 is shared with
+``batched.py``: lazy eigenvector assembly + masked-scan projection
+selection, so the whole thing is jit/vmap clean.
+
+The spectrum is factored — only the O(N) product eigenvalues are ever
+built, never the N eigenvectors — so a KronDPP k-DPP costs
+O(sum N_i^3 + N k) setup instead of O(N^3). A dense kernel is the m=1
+case (``sample_kdpp_dense``), which is what the serving layer uses for
+stochastic KV-cache eviction.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .batched import compact_selection, gather_factor_columns, phase2_select
+from .spectral import FactorSpectrum, log_product_spectrum
+
+_NEG_INF = -jnp.inf
+
+
+def log_esp_table(log_lam: jax.Array, k: int) -> jax.Array:
+    """log e_j(λ_1..λ_n) for n = 0..N, j = 0..k — shape (N+1, k+1).
+
+    log_lam may contain -inf (zero eigenvalues); the recursion is pure
+    logaddexp so those contribute nothing.
+    """
+    row0 = jnp.full((k + 1,), _NEG_INF).at[0].set(0.0)
+
+    def body(prev, ll):
+        new = prev.at[1:].set(jnp.logaddexp(prev[1:], prev[:-1] + ll))
+        return new, new
+
+    _, rows = jax.lax.scan(body, row0, log_lam)
+    return jnp.concatenate([row0[None], rows], axis=0)
+
+
+def _phase1_kdpp(key: jax.Array, log_lam: jax.Array, k: int) -> jax.Array:
+    """Conditional eigenvalue draw: (N,) bool mask with exactly k set
+    (assuming >= k nonzero eigenvalues; fewer and the trailing picks have
+    probability 0 and the mask carries < k — phase 2 masks them out)."""
+    N = log_lam.shape[0]
+    table = log_esp_table(log_lam, k)
+    u = jax.random.uniform(key, (N,))
+
+    def body(k_rem, inp):
+        n, ll, un = inp                       # n runs N..1
+        log_num = ll + table[n - 1, jnp.maximum(k_rem - 1, 0)]
+        log_den = table[n, k_rem]
+        p = jnp.exp(jnp.minimum(log_num - log_den, 0.0))
+        p = jnp.where((k_rem > 0) & jnp.isfinite(log_den), p, 0.0)
+        inc = un < p
+        return k_rem - inc.astype(k_rem.dtype), inc
+
+    ns = jnp.arange(N, 0, -1)
+    _, incs = jax.lax.scan(
+        body, jnp.asarray(k, jnp.int32), (ns, log_lam[::-1], u))
+    return incs[::-1]
+
+
+def _sample_one_kdpp(key: jax.Array, lams: Tuple[jax.Array, ...],
+                     vecs: Tuple[jax.Array, ...], k: int) -> jax.Array:
+    sizes = tuple(l.shape[0] for l in lams)
+    ll = log_product_spectrum(lams)
+    k1, k2 = jax.random.split(key)
+    mask = _phase1_kdpp(k1, ll, k)
+    sel, valid = compact_selection(mask, k)
+    Gs = gather_factor_columns(vecs, sizes, sel, valid)
+    return phase2_select(k2, Gs, sizes, jnp.sum(mask))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _sample_kdpp_batched(keys, lams, vecs, k):
+    return jax.vmap(lambda kk: _sample_one_kdpp(kk, lams, vecs, k))(keys)
+
+
+def sample_kdpp_batched(key: jax.Array, spectrum: FactorSpectrum, k: int,
+                        num_samples: int = 1) -> jax.Array:
+    """``num_samples`` exact k-DPP samples in one device call.
+
+    Returns (num_samples, k) int32 — every row has exactly k distinct
+    items when the kernel has rank >= k.
+    """
+    keys = jax.random.split(key, num_samples)
+    return _sample_kdpp_batched(keys, tuple(spectrum.lams),
+                                tuple(spectrum.vecs), int(k))
+
+
+def sample_kdpp_dense(key: jax.Array, L: jax.Array, k: int) -> jax.Array:
+    """Exact k-DPP sample from a dense kernel, fully jit/vmap-able.
+
+    The eigendecomposition happens inside the trace (m=1 spectrum), so this
+    composes with vmap over per-head kernels in the serving layer.
+    """
+    lam, vec = jnp.linalg.eigh(L)
+    lam = jnp.maximum(lam, 0.0)
+    return _sample_one_kdpp(key, (lam,), (vec,), int(k))

@@ -1,0 +1,150 @@
+"""Micro-batching front-end for the device-resident samplers.
+
+Serving and data-pipeline callers each want "a few samples, now"; the
+device wants one big vmapped call. ``SamplingService`` bridges the two:
+``submit()`` enqueues a request and returns a ticket, ``flush()`` coalesces
+every pending request into a single batched device call and scatters the
+rows back to their tickets. Tickets flush lazily on ``.result()``, so the
+common one-caller path is just ``service.sample(n)``.
+
+Coalesced batch sizes are rounded up to the next power of two (surplus
+rows are simply dropped) so a service sees O(log max_batch) distinct
+(k_max, batch) shapes — and therefore O(log) compiles — no matter how
+request sizes drift.
+
+Determinism: the service owns a PRNG key seeded at construction and splits
+it once per device call, so a fixed seed and submission order reproduces
+every sample exactly (the property the resumable data pipeline relies on).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+
+from ..core.krondpp import KronDPP
+from .batched import picks_to_lists, sample_krondpp_batched
+from .kdpp import sample_kdpp_batched
+from .spectral import SpectralCache, default_cache
+
+
+class SampleTicket:
+    """Handle for a submitted request; ``result()`` flushes if needed."""
+
+    def __init__(self, service: "SamplingService", num_samples: int):
+        self._service = service
+        self.num_samples = num_samples
+        self._result: Optional[List[List[int]]] = None
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> List[List[int]]:
+        if self._result is None:
+            self._service.flush()
+        if self._result is None:
+            raise RuntimeError(
+                "ticket unresolved after flush — a prior device call "
+                "failed; resubmit or flush again")
+        return self._result
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    device_calls: int = 0
+    samples_drawn: int = 0
+    samples_requested: int = 0
+    flushes: int = 0
+
+
+class SamplingService:
+    """Batched exact sampling against one KronDPP kernel.
+
+    The factor spectra come from a ``SpectralCache`` (shared across
+    services by default), so constructing a second service over the same
+    factor arrays does zero eigendecomposition work.
+    """
+
+    def __init__(self, dpp: KronDPP, k_max: Optional[int] = None,
+                 cache: Optional[SpectralCache] = None, seed: int = 0,
+                 max_batch: int = 1024):
+        self.cache = cache if cache is not None else default_cache()
+        self.spectrum = self.cache.spectrum(dpp)
+        self.k_max = int(k_max) if k_max is not None \
+            else self.spectrum.suggested_k_max()
+        self.max_batch = int(max_batch)
+        self._key = jax.random.PRNGKey(seed)
+        self._pending: List[SampleTicket] = []
+        self.stats = ServiceStats()
+
+    # -- request path -------------------------------------------------------
+    def submit(self, num_samples: int) -> SampleTicket:
+        if num_samples <= 0:
+            raise ValueError("num_samples must be positive")
+        t = SampleTicket(self, num_samples)
+        self._pending.append(t)
+        self.stats.samples_requested += num_samples
+        return t
+
+    def sample(self, num_samples: int) -> List[List[int]]:
+        """submit + flush: ``num_samples`` subsets as index lists."""
+        return self.submit(num_samples).result()
+
+    def sample_kdpp(self, k: int, num_samples: int = 1) -> List[List[int]]:
+        """Exactly-k subsets (conditional ESP draw); immediate, not queued
+        — each distinct k is its own compiled shape. Device calls are
+        chunked at max_batch like ``flush``."""
+        drawn: List[List[int]] = []
+        remaining = self._round_up(num_samples)
+        while len(drawn) < num_samples:
+            batch = min(remaining, self.max_batch)
+            self._key, sub = jax.random.split(self._key)
+            picks = sample_kdpp_batched(sub, self.spectrum, k, batch)
+            self.stats.device_calls += 1
+            self.stats.samples_drawn += batch
+            drawn.extend(picks_to_lists(picks))
+            remaining -= batch
+        return drawn[:num_samples]
+
+    # -- batching core ------------------------------------------------------
+    def _round_up(self, n: int) -> int:
+        """Compiled batch shapes are powers of two capped at max_batch,
+        plus max_batch itself — O(log max_batch) distinct shapes total."""
+        if n >= self.max_batch:
+            return ((n + self.max_batch - 1)
+                    // self.max_batch) * self.max_batch
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self.max_batch)
+
+    def flush(self) -> None:
+        """One vmapped device call for everything pending, then scatter.
+
+        Tickets stay pending until every draw succeeds, so a failed device
+        call (OOM, interrupt) leaves them retryable instead of stranding
+        ``result()`` callers.
+        """
+        if not self._pending:
+            return
+        tickets = list(self._pending)
+        total = sum(t.num_samples for t in tickets)
+        drawn: List[List[int]] = []
+        remaining = self._round_up(total)
+        while len(drawn) < total:
+            batch = min(remaining, self.max_batch)
+            self._key, sub = jax.random.split(self._key)
+            picks, _ = sample_krondpp_batched(sub, self.spectrum,
+                                              self.k_max, batch)
+            self.stats.device_calls += 1
+            self.stats.samples_drawn += batch
+            drawn.extend(picks_to_lists(picks))
+            remaining -= batch
+        del self._pending[: len(tickets)]
+        self.stats.flushes += 1
+        off = 0
+        for t in tickets:
+            t._result = drawn[off: off + t.num_samples]
+            off += t.num_samples

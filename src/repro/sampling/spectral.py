@@ -1,0 +1,165 @@
+"""Factor eigendecomposition cache for device-resident sampling.
+
+Exact DPP sampling (paper Alg. 2 / Sec. 4) is two phases: a spectrum draw
+and a projection-selection loop. The only O(N_i^3) work is the per-factor
+``eigh`` — everything downstream is O(N k) — so repeated sampling against
+one kernel should pay for the eigendecomposition exactly once. The cache
+here is keyed on *factor identity* (not value), so two KronDPPs that share
+a factor array share its spectrum, and the KrK-Picard training loop (which
+rebuilds factors every step) naturally misses.
+
+Entries hold a strong reference to the keyed factor, so an ``id()`` can
+never be recycled by a different live array while its entry is cached.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.krondpp import KronDPP
+
+
+def log_product_spectrum(lams: Tuple[jax.Array, ...]) -> jax.Array:
+    """log of the Kronecker product spectrum {prod_i lams[i][g_i]}, folded
+    factor-wise in log space (row-major global order, matching
+    ``KronDPP.split_indices``).
+
+    This is THE spectrum fold for the subsystem — a linear-space fold
+    overflows float32 once per-factor eigenvalues multiply past ~3e38,
+    silently turning inclusion probabilities into NaN. Zero eigenvalues
+    map to -inf, which every consumer handles (sigmoid -> 0, logaddexp
+    ignores). Usable inside jit.
+    """
+    v = jnp.log(lams[0])
+    for l in lams[1:]:
+        v = (v[:, None] + jnp.log(l)[None, :]).reshape(-1)
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorSpectrum:
+    """Per-factor eigendecompositions of L = L_1 ⊗ ... ⊗ L_m.
+
+    lams[i]: (N_i,) eigenvalues of factor i, clipped to >= 0, ascending.
+    vecs[i]: (N_i, N_i) orthonormal eigenvectors (columns).
+
+    The product spectrum {prod_i lams[i][g_i]} is only ever materialized as
+    an O(N) vector; the N eigenvectors are assembled lazily per sample.
+    """
+    lams: Tuple[jax.Array, ...]
+    vecs: Tuple[jax.Array, ...]
+
+    @property
+    def m(self) -> int:
+        return len(self.lams)
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(int(l.shape[0]) for l in self.lams)
+
+    @property
+    def N(self) -> int:
+        out = 1
+        for s in self.sizes:
+            out *= s
+        return out
+
+    def eigenvalues(self) -> jax.Array:
+        """All N eigenvalues, row-major factor-index order (matches
+        ``KronDPP.split_indices``). Reference only — overflows float32 for
+        huge products; the sampling paths use ``log_eigenvalues``."""
+        v = self.lams[0]
+        for l in self.lams[1:]:
+            v = jnp.outer(v, l).reshape(-1)
+        return v
+
+    def log_eigenvalues(self) -> jax.Array:
+        """log of the product spectrum (``log_product_spectrum``)."""
+        return log_product_spectrum(self.lams)
+
+    def expected_size(self) -> float:
+        """E|Y| = sum λ/(1+λ) = sum sigmoid(log λ) — overflow-safe."""
+        return float(jnp.sum(jax.nn.sigmoid(self.log_eigenvalues())))
+
+    def size_std(self) -> float:
+        """sqrt(Var|Y|), Var|Y| = sum p(1-p) with p = λ/(1+λ)."""
+        ll = self.log_eigenvalues()
+        p = jax.nn.sigmoid(ll)
+        return float(jnp.sqrt(jnp.sum(p * jax.nn.sigmoid(-ll))))
+
+    def suggested_k_max(self, num_std: float = 6.0) -> int:
+        """Static phase-2 budget: E|Y| + num_std·σ, clamped to [1, N].
+
+        Samples larger than k_max are truncated (lowest eigen-indices kept);
+        at 6σ that is a ~1e-9 event per draw.
+        """
+        k = math.ceil(self.expected_size() + num_std * self.size_std()) + 1
+        return max(1, min(k, self.N))
+
+
+class SpectralCache:
+    """LRU cache of per-factor eigendecompositions, keyed on array identity.
+
+    ``spectrum(dpp)`` looks up each factor independently, so hits/misses
+    count factor lookups (a 2-factor KronDPP costs two lookups)."""
+
+    def __init__(self, maxsize: int = 16):
+        self.maxsize = maxsize
+        self._entries = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._entries)}
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def _factor(self, f: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        key = (id(f), tuple(f.shape), str(f.dtype))
+        hit = self._entries.get(key)
+        if hit is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return hit[1], hit[2]
+        self.misses += 1
+        lam, vec = jnp.linalg.eigh(f)
+        lam = jnp.maximum(lam, 0.0)
+        self._entries[key] = (f, lam, vec)   # strong ref pins the id
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return lam, vec
+
+    def spectrum(self, dpp: KronDPP) -> FactorSpectrum:
+        """FactorSpectrum for a KronDPP — O(sum N_i^3) on miss, O(1) on hit."""
+        pairs = [self._factor(f) for f in dpp.factors]
+        return FactorSpectrum(tuple(p[0] for p in pairs),
+                              tuple(p[1] for p in pairs))
+
+    def spectrum_dense(self, L: jax.Array) -> FactorSpectrum:
+        """A dense kernel is the m=1 degenerate case — the whole batched
+        pipeline (phase 1/2, k-DPP) works on it unchanged."""
+        lam, vec = self._factor(L)
+        return FactorSpectrum((lam,), (vec,))
+
+
+_DEFAULT_CACHE: Optional[SpectralCache] = None
+
+
+def default_cache() -> SpectralCache:
+    """Process-wide cache shared by the convenience entry points."""
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None:
+        _DEFAULT_CACHE = SpectralCache()
+    return _DEFAULT_CACHE

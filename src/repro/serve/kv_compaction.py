@@ -3,9 +3,12 @@ companion work) applied to cached tokens.
 
 When a full-attention KV cache exceeds its budget, keep the most *diverse*
 key subset (plus a recency window): build an L-kernel over key vectors and
-take the greedy k-DPP MAP (Chen et al. 2018 fast greedy, the `greedy_map`
-Pallas kernel's op). Diversity-preserving eviction retains long-range anchors
-that recency-only (SWA) eviction drops.
+either take the greedy k-DPP MAP (Chen et al. 2018 fast greedy, the
+`greedy_map` Pallas kernel's op, ``method="map"``) or draw an *exact*
+k-DPP sample (``method="sample"`` — the batched phase-1/2 machinery from
+``repro.sampling``, which de-biases eviction across heads at the same
+O(S k) per-step cost after the in-trace eigh). Diversity-preserving
+eviction retains long-range anchors that recency-only (SWA) eviction drops.
 
 jit-able with static budget; runs per (layer, batch, kv-head) via vmap.
 """
@@ -19,14 +22,18 @@ import jax.numpy as jnp
 
 from ..core.sampling import greedy_map_kdpp
 from ..models.attention import KVCache
+from ..sampling.kdpp import sample_kdpp_dense
 
 
 def dpp_select_tokens(keys: jax.Array, budget: int, recency: int = 0,
-                      valid_len: int | None = None) -> jax.Array:
+                      valid_len: int | None = None, method: str = "map",
+                      key: jax.Array | None = None) -> jax.Array:
     """Pick `budget` diverse token positions from keys (S, d).
 
     recency: that many most-recent positions are always kept; the DPP picks
     the remaining budget-recency from the older region.
+    method: "map" (deterministic greedy MAP) or "sample" (exact k-DPP draw;
+    requires `key`).
     Returns sorted (budget,) int32 positions.
     """
     S, d = keys.shape
@@ -34,34 +41,74 @@ def dpp_select_tokens(keys: jax.Array, budget: int, recency: int = 0,
     kf = keys.astype(jnp.float32)
     kf = kf / (jnp.linalg.norm(kf, axis=-1, keepdims=True) + 1e-6)
     L = kf @ kf.T + 1e-4 * jnp.eye(S)
-    if valid_len is not None:
-        # exclude the recency window and invalid slots from DPP selection by
-        # zeroing their similarity rows (diag -> tiny conditional variance)
-        pos = jnp.arange(S)
-        sel_ok = pos < (valid_len - recency)
+    pos = jnp.arange(S)
+    # the recency window is force-kept below, so it must be excluded from
+    # DPP selection even when the whole cache is valid — otherwise picks
+    # duplicate recent positions and waste budget slots
+    vl = S if valid_len is None else valid_len
+    sel_ok = pos < (vl - recency)
+    if method == "sample":
+        if key is None:
+            raise ValueError("method='sample' needs a PRNG key")
+        # Hard exclusion: excluded slots must get *exactly* zero eigenvalue
+        # mass — a tiny ridge (safe for greedy argmax) leaks under an exact
+        # k-DPP draw whenever k_dpp exceeds the valid keys' numerical rank,
+        # and a leaked slot means a duplicated recency token or a garbage
+        # key attending in decode.
+        Ls = jnp.where(sel_ok[:, None] & sel_ok[None, :], L, 0.0)
+        sampled = sample_kdpp_dense(key, Ls, k_dpp)   # -1-padded if rank < k
+        # Fixed-shape fallback: keep every sampled position, fill any -1
+        # slots with the most recent unsampled selectable positions.
+        hit = jnp.zeros((S + 1,), bool).at[
+            jnp.where(sampled >= 0, sampled, S)].set(True)[:S]
+        score = jnp.where(hit, 2.0 * S,
+                          jnp.where(sel_ok, pos.astype(jnp.float32), -1.0))
+        _, picks = jax.lax.top_k(score, k_dpp)
+        picks = picks.astype(jnp.int32)
+    else:
+        # soft exclusion (diag -> tiny conditional variance) is enough for
+        # the deterministic argmax; a no-op when sel_ok is all-True
         L = jnp.where(sel_ok[:, None] & sel_ok[None, :], L,
                       jnp.where(jnp.eye(S, dtype=bool), 1e-6, 0.0))
-    picks = greedy_map_kdpp(L, k_dpp)
+        picks = greedy_map_kdpp(L, k_dpp)
     if recency > 0:
-        vl = S if valid_len is None else valid_len
         recent = vl - 1 - jnp.arange(recency)
         picks = jnp.concatenate([picks, recent.astype(jnp.int32)])
     return jnp.sort(picks)
 
 
-def compact_kv_cache(cache: KVCache, budget: int, recency: int = 64
+def compact_kv_cache(cache: KVCache, budget: int, recency: int = 64,
+                     method: str = "map", key: jax.Array | None = None
                      ) -> Tuple[KVCache, jax.Array]:
     """Compact one layer's cache (B, S, KV, hd) down to (B, budget, KV, hd).
 
     Selection is per (batch, kv-head) on the key vectors; returns the new
     cache and the kept positions (B, KV, budget) for position bookkeeping.
+    method="sample" draws an exact k-DPP per head (needs `key`) instead of
+    the deterministic greedy MAP.
     """
     B, S, KV, hd = cache.k.shape
 
-    def one(keys):  # (S, hd)
-        return dpp_select_tokens(keys, budget, recency, valid_len=cache.pos)
+    if method == "sample":
+        if key is None:
+            raise ValueError("method='sample' needs a PRNG key")
+        # shape-tuple split works for both typed and legacy uint32 keys
+        # (a reshape would mangle the trailing dim of typed key arrays)
+        hkeys = jax.random.split(key, (B, KV))
 
-    picks = jax.vmap(jax.vmap(one, in_axes=1), in_axes=0)(cache.k)  # (B,KV,bud)
+        def one_s(keys, hk):  # (S, hd), per-head key
+            return dpp_select_tokens(keys, budget, recency,
+                                     valid_len=cache.pos,
+                                     method="sample", key=hk)
+
+        picks = jax.vmap(jax.vmap(one_s, in_axes=(1, 0)),
+                         in_axes=(0, 0))(cache.k, hkeys)       # (B,KV,bud)
+    else:
+        def one(keys):  # (S, hd)
+            return dpp_select_tokens(keys, budget, recency,
+                                     valid_len=cache.pos)
+
+        picks = jax.vmap(jax.vmap(one, in_axes=1), in_axes=0)(cache.k)
 
     def gather(arr):
         # arr (B, S, KV, hd), picks (B, KV, budget) -> (B, budget, KV, hd)

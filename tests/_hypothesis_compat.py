@@ -1,0 +1,39 @@
+"""Optional-dependency shim for `hypothesis`.
+
+`hypothesis` is not a hard requirement of the repo; a clean checkout must
+still collect and run the full suite. Importing this module gives either
+the real library or a stub whose ``@given`` replaces the property test
+with a skip — so plain tests in the same module keep running instead of
+the whole file dying at collection (the failure mode
+``pytest.importorskip`` at module level would reintroduce).
+"""
+
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    class _HypothesisStub:
+        @staticmethod
+        def given(*a, **k):
+            def deco(fn):
+                def skipped():
+                    pytest.skip("hypothesis not installed")
+                skipped.__name__ = getattr(fn, "__name__", "property_test")
+                return skipped
+            return deco
+
+        @staticmethod
+        def settings(*a, **k):
+            return lambda fn: fn
+
+    st = _Strategies()
+    hypothesis = _HypothesisStub()

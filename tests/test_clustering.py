@@ -1,7 +1,6 @@
 """Greedy SUKP subset clustering (paper Sec. 3.3)."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import numpy as np
 import pytest
 

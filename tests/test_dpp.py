@@ -1,8 +1,7 @@
 """DPP semantics: likelihood vs enumeration, sampler exactness (paper Eq. 2,
 Alg. 2 / Sec. 4)."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

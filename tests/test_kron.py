@@ -1,7 +1,6 @@
 """Kronecker algebra unit + property tests (paper Sec. 2)."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
