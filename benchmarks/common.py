@@ -14,20 +14,10 @@ from repro.core import KronDPP, SubsetBatch, random_krondpp, sample_krondpp
 
 
 def rescale_expected_size(dpp: KronDPP, target: float) -> KronDPP:
-    """Scale the factors so E|Y| = sum λ/(1+λ) hits `target` (bisection on
-    the product spectrum). Raw U[0, sqrt(2)] kernels have E|Y| ~ N, which
-    buries any setup-cost comparison under the shared O(N k^3) selection."""
-    import jax.numpy as jnp
-    lam = np.asarray(dpp.eigenvalues(), np.float64)
-    g_lo, g_hi = 1e-12, 1e6
-    for _ in range(200):
-        g = np.sqrt(g_lo * g_hi)
-        if (g * lam / (1 + g * lam)).sum() > target:
-            g_hi = g
-        else:
-            g_lo = g
-    return KronDPP(tuple(jnp.asarray(f) * (g ** (1.0 / dpp.m))
-                         for f in dpp.factors))
+    """Delegates to the library implementation (log-space bisection in
+    ``repro.sampling.spectral``); kept as the benchmarks' import point."""
+    from repro.sampling import rescale_expected_size as _rescale
+    return _rescale(dpp, target)
 
 
 def json_report(name: str, payload: dict) -> str:
@@ -50,22 +40,9 @@ def paper_synthetic_data(key, sizes, n_subsets, size_lo, size_hi, seed=0
     The raw U[0,sqrt(2)] kernel at large N has E|Y| ~ N; we rescale L by a
     scalar (bisection on the eigenvalues) so E|Y| = (lo+hi)/2 — the paper's
     size band is then hit by light rejection instead of never."""
-    import jax.numpy as jnp
     rng = np.random.default_rng(seed)
-    true = random_krondpp(key, sizes)
-    lam = np.asarray(true.eigenvalues(), np.float64)
-    target = 0.5 * (size_lo + size_hi)
-    g_lo, g_hi = 1e-9, 1e3
-    for _ in range(80):
-        g = np.sqrt(g_lo * g_hi)
-        e = (g * lam / (1 + g * lam)).sum()
-        if e > target:
-            g_hi = g
-        else:
-            g_lo = g
-    m = len(sizes)
-    true = KronDPP(tuple(jnp.asarray(f) * (g ** (1.0 / m))
-                         for f in true.factors))
+    true = rescale_expected_size(random_krondpp(key, sizes),
+                                 0.5 * (size_lo + size_hi))
     subs: List[List[int]] = []
     tries = 0
     while len(subs) < n_subsets and tries < n_subsets * 40:

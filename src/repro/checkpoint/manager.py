@@ -95,6 +95,10 @@ class CheckpointManager:
                   for i in range(meta["n_leaves"])]
         if target is not None:
             treedef = jax.tree_util.tree_structure(target)
+        elif meta.get("tree") is None:
+            raise ValueError(
+                f"checkpoint step_{step} holds custom pytree nodes; pass a "
+                "`target` tree to restore it")
         else:
             treedef = jax.tree_util.tree_structure(
                 json.loads(meta["tree"]), is_leaf=lambda x: x is None)
@@ -124,9 +128,15 @@ class CheckpointManager:
         os.makedirs(d_tmp)
         leaves, treedef = jax.tree_util.tree_flatten(host_tree)
         skeleton = jax.tree_util.tree_unflatten(treedef, [None] * len(leaves))
+        try:
+            tree_json = json.dumps(skeleton)
+        except TypeError:
+            # custom pytree nodes (e.g. learning.LearnerState) have no JSON
+            # form; such checkpoints restore via an explicit `target` tree.
+            tree_json = None
         with open(os.path.join(d_tmp, "meta.json"), "w") as f:
             json.dump({"step": step, "n_leaves": len(leaves),
-                       "tree": json.dumps(skeleton),
+                       "tree": tree_json,
                        "time": time.time()}, f)
         for i, leaf in enumerate(leaves):
             np.save(os.path.join(d_tmp, f"arr_{i}.npy"), leaf)

@@ -10,8 +10,9 @@ Public API:
 from . import kron, dpp, sampling, clustering
 from .dpp import SubsetBatch, log_likelihood, picard_delta
 from .krondpp import KronDPP, random_krondpp
-from .krk_picard import (krk_picard_step, fit_krk_picard, accumulate_AC,
-                         AC_from_dense_theta)
+from .krk_picard import (krk_picard_step, krk_picard_stochastic_step,
+                         fit_krk_picard, accumulate_AC, AC_from_dense_theta,
+                         compute_AC)
 from .picard import picard_step, fit_picard
 from .joint_picard import joint_picard_step, fit_joint_picard
 from .em import fit_em
@@ -21,7 +22,8 @@ from .clustering import greedy_subset_clustering
 
 __all__ = [
     "KronDPP", "SubsetBatch", "random_krondpp", "log_likelihood", "picard_delta",
-    "krk_picard_step", "fit_krk_picard", "accumulate_AC", "AC_from_dense_theta",
+    "krk_picard_step", "krk_picard_stochastic_step", "fit_krk_picard",
+    "accumulate_AC", "AC_from_dense_theta", "compute_AC",
     "picard_step", "fit_picard", "joint_picard_step", "fit_joint_picard",
     "fit_em", "sample_full_dpp", "sample_krondpp", "sample_krondpp_batch",
     "greedy_map_kdpp",

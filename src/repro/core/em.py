@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import List
 
 import jax
@@ -74,18 +73,11 @@ class EMResult:
 
 def fit_em(L0: jax.Array, batch: SubsetBatch, iters: int = 10, lr: float = 1e-2,
            track_ll: bool = True) -> EMResult:
-    lam, V = jnp.linalg.eigh(L0)
-    lam = jnp.maximum(lam, 1e-6)
-    lls, times = [], []
-    if track_ll:
-        lls.append(float(log_likelihood((V * lam[None, :]) @ V.T, batch)))
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        q = e_step(lam, V, batch)
-        lam = m_step_eigvals(q)
-        V = eigvec_ascent(lam, V, batch, lr)
-        jax.block_until_ready(V)
-        times.append(time.perf_counter() - t0)
-        if track_ll:
-            lls.append(float(log_likelihood((V * lam[None, :]) @ V.T, batch)))
-    return EMResult((V * lam[None, :]) @ V.T, lls, times)
+    """DEPRECATED: thin delegate into ``repro.learning.fit(algorithm="em")``
+    (the scan-compiled engine). The E/M/ascent sweep is unchanged; it now
+    runs inside one compiled chunk per tracked step."""
+    from ..learning.api import fit as _fit
+
+    rep = _fit(L0, batch, algorithm="em", iters=iters, a=lr,
+               track_ll=track_ll)
+    return EMResult(rep.model, rep.log_likelihoods, rep.sweep_times)

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import List, Tuple
 
 import jax
@@ -64,15 +63,10 @@ class JointResult:
 
 def fit_joint_picard(model: KronDPP, batch: SubsetBatch, iters: int = 10,
                      a: float = 1.0, track_ll: bool = True) -> JointResult:
-    L1, L2 = model.factors
-    lls, times = [], []
-    if track_ll:
-        lls.append(float(KronDPP((L1, L2)).log_likelihood(batch)))
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        L1, L2 = joint_picard_step(L1, L2, batch, a)
-        jax.block_until_ready((L1, L2))
-        times.append(time.perf_counter() - t0)
-        if track_ll:
-            lls.append(float(KronDPP((L1, L2)).log_likelihood(batch)))
-    return JointResult(KronDPP((L1, L2)), lls, times)
+    """DEPRECATED: thin delegate into ``repro.learning.fit(algorithm="joint")``
+    (the scan-compiled engine)."""
+    from ..learning.api import fit as _fit
+
+    rep = _fit(model, batch, algorithm="joint", iters=iters, a=a,
+               track_ll=track_ll)
+    return JointResult(rep.model, rep.log_likelihoods, rep.sweep_times)

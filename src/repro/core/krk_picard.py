@@ -102,32 +102,49 @@ def _alpha_beta(d1: jax.Array, d2: jax.Array) -> Tuple[jax.Array, jax.Array]:
 # One KrK-Picard step
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("use_dense_theta",))
+def compute_AC(L1: jax.Array, L2: jax.Array, batch: SubsetBatch,
+               use_dense_theta: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """The (A, C) Θ-statistics of Appendix B, by either route. One call
+    does the full O(nκ³) pass over the batch and yields BOTH contractions
+    (the dense route builds Θ exactly once)."""
+    if use_dense_theta:
+        theta = theta_matrix_kron(L1, L2, batch)
+        return AC_from_dense_theta(theta, L1, L2)
+    return accumulate_AC(L1, L2, batch)
+
+
+@functools.partial(jax.jit, static_argnames=("use_dense_theta", "fresh_theta"))
 def krk_picard_step(L1: jax.Array, L2: jax.Array, batch: SubsetBatch,
-                    a: float = 1.0, use_dense_theta: bool = False
-                    ) -> Tuple[jax.Array, jax.Array]:
-    """One sweep of Alg. 1 (updates L1 then L2, per the block-CCCP order)."""
+                    a: float = 1.0, use_dense_theta: bool = False,
+                    fresh_theta: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """One sweep of Alg. 1 (updates L1 then L2, per the block-CCCP order).
+
+    fresh_theta=True recomputes the Θ-statistics (and the L1 spectrum) at
+    the half-updated kernel before the L2 half — the block-CCCP refresh.
+    fresh_theta=False caches the single (A, C) evaluation at (L1, L2)
+    across both half-updates, halving the O(nκ³) pass per sweep (and the
+    dense route's Θ build) at the cost of slightly stale L2 statistics —
+    the same stale-statistics variant ``core.distributed`` exposes as
+    ``fresh_spectrum=False``.
+    """
     N1, N2 = L1.shape[0], L2.shape[0]
 
-    def AC(L1, L2):
-        if use_dense_theta:
-            theta = theta_matrix_kron(L1, L2, batch)
-            return AC_from_dense_theta(theta, L1, L2)
-        return accumulate_AC(L1, L2, batch)
-
     # ---- update L1 (holding L2) ----
-    A, _ = AC(L1, L2)
+    A, C0 = compute_AC(L1, L2, batch, use_dense_theta)
     d1, P1 = jnp.linalg.eigh(L1)
     d2, P2 = jnp.linalg.eigh(L2)
-    alpha, _ = _alpha_beta(d1, d2)
+    alpha, beta0 = _alpha_beta(d1, d2)
     L1BL1 = (P1 * (d1 ** 2 * alpha)[None, :]) @ P1.T
     L1_new = L1 + (a / N2) * (L1 @ A @ L1 - L1BL1)
     L1_new = 0.5 * (L1_new + L1_new.T)
 
     # ---- update L2 (holding the NEW L1; alternating block order) ----
-    _, C = AC(L1_new, L2)
-    d1, P1 = jnp.linalg.eigh(L1_new)
-    _, beta = _alpha_beta(d1, d2)
+    if fresh_theta:
+        _, C = compute_AC(L1_new, L2, batch, use_dense_theta)
+        d1n = jnp.linalg.eigvalsh(L1_new)
+        _, beta = _alpha_beta(d1n, d2)
+    else:
+        C, beta = C0, beta0
     B2 = (P2 * beta[None, :]) @ P2.T
     L2_new = L2 + (a / N1) * (L2 @ C @ L2 - B2)
     L2_new = 0.5 * (L2_new + L2_new.T)
@@ -156,13 +173,19 @@ def theta_matrix_kron(L1: jax.Array, L2: jax.Array, batch: SubsetBatch) -> jax.A
 # Stochastic KrK-Picard: minibatch of subsets per step (paper Sec. 3.1.2)
 # ---------------------------------------------------------------------------
 
-def krk_picard_stochastic_step(L1, L2, minibatch: SubsetBatch, a: float = 1.0):
-    """Identical update with Δ built from a minibatch: O(Nκ^2 + N^{3/2})."""
-    return krk_picard_step(L1, L2, minibatch, a)
+def krk_picard_stochastic_step(L1, L2, minibatch: SubsetBatch, a: float = 1.0,
+                               use_dense_theta: bool = False,
+                               fresh_theta: bool = True):
+    """Identical update with Δ built from a minibatch: O(Nκ^2 + N^{3/2}).
+
+    Accepts the same options as the batch step (the flags used to be
+    silently dropped here, forking the batch/stochastic behavior).
+    """
+    return krk_picard_step(L1, L2, minibatch, a, use_dense_theta, fresh_theta)
 
 
 # ---------------------------------------------------------------------------
-# Fit loop (host-side driver)
+# Fit loop — deprecated delegate into the device-resident engine
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -175,26 +198,22 @@ class FitResult:
 def fit_krk_picard(model: KronDPP, batch: SubsetBatch, iters: int = 10,
                    a: float = 1.0, minibatch_size: Optional[int] = None,
                    seed: int = 0, track_ll: bool = True,
-                   use_dense_theta: bool = False) -> FitResult:
-    """Run Alg. 1 (batch, or stochastic if minibatch_size is set)."""
-    import time
-    import numpy as np
+                   use_dense_theta: bool = False,
+                   fresh_theta: bool = True) -> FitResult:
+    """Run Alg. 1 (batch, or stochastic if minibatch_size is set).
 
-    L1, L2 = model.factors
-    lls, times = [], []
-    rng = np.random.default_rng(seed)
-    if track_ll:
-        lls.append(float(KronDPP((L1, L2)).log_likelihood(batch)))
-    for it in range(iters):
-        if minibatch_size is not None:
-            sel = rng.choice(batch.n, size=minibatch_size, replace=False)
-            sub = SubsetBatch(batch.indices[sel], batch.mask[sel])
-        else:
-            sub = batch
-        t0 = time.perf_counter()
-        L1, L2 = krk_picard_step(L1, L2, sub, a, use_dense_theta)
-        jax.block_until_ready((L1, L2))
-        times.append(time.perf_counter() - t0)
-        if track_ll:
-            lls.append(float(KronDPP((L1, L2)).log_likelihood(batch)))
-    return FitResult(KronDPP((L1, L2)), lls, times)
+    DEPRECATED: thin delegate into ``repro.learning.fit`` (the
+    scan-compiled engine); prefer calling that directly for schedules,
+    chunked LL tracking, checkpointing and the distributed mode. Note the
+    stochastic path now selects minibatches on device from a
+    ``jax.random`` stream, so for a given ``seed`` the draws differ from
+    the old host-numpy rng (the distribution is identical).
+    """
+    from ..learning.api import fit as _fit
+
+    rep = _fit(model, batch,
+               algorithm="krk" if minibatch_size is None else "krk-stochastic",
+               iters=iters, a=a, minibatch_size=minibatch_size, seed=seed,
+               track_ll=track_ll, use_dense_theta=use_dense_theta,
+               fresh_theta=fresh_theta)
+    return FitResult(rep.model, rep.log_likelihoods, rep.sweep_times)

@@ -30,7 +30,6 @@ import jax.numpy as jnp
 
 from ..core.krondpp import KronDPP
 from ..core.sampling import sample_krondpp
-from ..core.krk_picard import fit_krk_picard
 from ..core.dpp import SubsetBatch
 
 
@@ -102,9 +101,22 @@ class DPPBatchSelector:
 
     # -- learning ------------------------------------------------------------
     def fit_from_subsets(self, subsets: Sequence[Sequence[int]],
-                         iters: int = 5, a: float = 1.0) -> "DPPBatchSelector":
-        """Adapt the kernels to observed 'good' batches via KrK-Picard."""
+                         iters: int = 5, a: float = 1.0,
+                         minibatch_size: Optional[int] = None,
+                         schedule=None, log_every: int = 0,
+                         ) -> "DPPBatchSelector":
+        """Adapt the kernels to observed 'good' batches via KrK-Picard,
+        run through the device-resident ``repro.learning`` engine (batch,
+        or stochastic when ``minibatch_size`` is set; pass a
+        ``learning.schedules`` schedule — e.g. ``armijo()`` — to guarantee
+        PSD factors + monotone ascent)."""
+        from ..learning import fit
         k_max = max(len(s) for s in subsets)
         batch = SubsetBatch.from_lists(subsets, k_max)
-        res = fit_krk_picard(self.dpp, batch, iters=iters, a=a, track_ll=False)
-        return dataclasses.replace(self, dpp=res.model)
+        rep = fit(self.dpp, batch,
+                  algorithm="krk" if minibatch_size is None
+                  else "krk-stochastic",
+                  iters=iters, a=a, schedule=schedule,
+                  minibatch_size=minibatch_size, track_ll=log_every > 0,
+                  log_every=log_every or iters)
+        return dataclasses.replace(self, dpp=rep.model)

@@ -1,0 +1,61 @@
+"""repro.learning — device-resident KronDPP learning engine (paper Sec. 3).
+
+The paper's second contribution — batch and stochastic optimization for
+learning KronDPP parameters — compiled the way ``repro.sampling`` compiled
+Sec. 4: whole epochs as ``lax.scan`` over sweeps with donated carries,
+on-device minibatch selection, and LL/metrics surfaced to the host only at
+chunk boundaries. The host drivers in ``repro.core`` (``fit_krk_picard``,
+``fit_em``, ``fit_joint_picard``) remain as thin deprecated delegates.
+
+Module map
+----------
+engine.py     ``LearningEngine`` + ``LearnerState`` — the compiled chunk
+              (scan over sweeps, ``jax.random.choice`` minibatches, the
+              op-for-op KrK/EM/Joint sweep bodies).
+objective.py  factored log-likelihood: masked subset logdets (vmap) plus
+              ``logdet(I + L1⊗L2)`` via the sampling subsystem's
+              log-space product-spectrum fold — never materializes the
+              N x N kernel.
+schedules.py  step-size policies for ``a``: constant, a0/sqrt(1+t), and
+              a device-side Armijo backtracking ``while_loop`` that
+              guarantees PSD iterates + per-sweep ascent (Thm 3.2).
+api.py        ``fit(model, batch, algorithm=..., ...)`` — one entry for
+              all learners, ``CheckpointManager`` save/resume of the
+              learner state, and the mesh-sharded mode that drops in
+              ``core.distributed.make_distributed_krk_step``.
+
+Per-sweep complexity (m = 2 factors, n subsets of size <= κ, minibatch b,
+P data-parallel devices; N = N1·N2, factor eigh = N1³ + N2³ = O(N^{3/2})):
+
+    =================  ==================================================
+    batch KrK          O(n(κ³ + κ² max(N1,N2)) + N^{3/2})
+    stochastic KrK     O(b(κ³ + κ² max(N1,N2)) + N^{3/2})
+    + fresh_theta      x2 on the Θ-statistics term (refresh before the
+                       L2 half); fresh_theta=False caches it
+    + armijo           + O(n_trials · (bκ³ + N^{3/2})) acceptance evals
+    distributed KrK    O((n/P)(κ³ + κ² max(N1,N2))) + O(N) psum
+                       + replicated N^{3/2} updates
+    EM (dense)         O(n(κ³ + κ²N) + N³)
+    joint Picard       O(nκ³ + N²) (dense Θ; no ascent guarantee)
+    LL tracking        O(nκ³ + N^{3/2}) per tracked sweep — every sweep
+                       (ll_mode="sweep") or once per log_every sweeps
+                       (ll_mode="chunk")
+    =================  ==================================================
+"""
+
+from . import schedules
+from .api import FitReport, fit
+from .engine import (ALGORITHMS, LearnerState, LearningEngine,
+                     select_minibatch)
+from .objective import (log_likelihood_eig, log_likelihood_factored,
+                        logdet_I_plus_kron, subset_logdets_factored)
+from .schedules import Schedule, ScheduleState, armijo, constant, inv_sqrt
+
+__all__ = [
+    "fit", "FitReport",
+    "LearningEngine", "LearnerState", "ALGORITHMS", "select_minibatch",
+    "log_likelihood_factored", "log_likelihood_eig", "logdet_I_plus_kron",
+    "subset_logdets_factored",
+    "schedules", "Schedule", "ScheduleState", "constant", "inv_sqrt",
+    "armijo",
+]

@@ -1,0 +1,261 @@
+"""The device-resident learning engine.
+
+The host drivers this engine replaces (``fit_krk_picard`` et al.) dispatch
+one device call per sweep, pick minibatches with host numpy, and sync a
+dense log-likelihood back every step. Here an entire chunk of
+``log_every`` sweeps is one compiled call:
+
+  * ``lax.scan`` over sweeps with the full ``LearnerState`` as a donated
+    carry — factors never leave the device between sweeps;
+  * minibatch selection inside the scan via ``jax.random.choice`` on the
+    carried PRNG key (deterministic, checkpointable, replayable);
+  * log-likelihood tracked with the factored objective
+    (``objective.log_likelihood_factored``) either every sweep
+    (``ll_mode="sweep"``, values surfaced once per chunk) or once per
+    chunk (``ll_mode="chunk"``), so LL stops being the per-step sync it
+    is in the legacy ``FitResult`` loops;
+  * step sizes from ``schedules`` — including the Armijo backtracking
+    ``while_loop`` that restores the Thm 3.2 PSD + ascent guarantee.
+
+Host-reference replication: the per-sweep key chain is
+``key, k_sel = jax.random.split(state.key)`` with ``k_sel`` fed to
+``select_minibatch`` — a host loop that mirrors this chain (see
+``tests/test_learning_engine.py`` and ``benchmarks/paper_fig1_engine.py``)
+reproduces the engine trajectory exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dpp import SubsetBatch
+from ..core.em import e_step, eigvec_ascent, m_step_eigvals
+from ..core.joint_picard import joint_picard_step
+from ..core.krk_picard import _alpha_beta, compute_AC
+from . import schedules
+from .objective import log_likelihood_eig, log_likelihood_factored
+
+ALGORITHMS = ("krk", "krk-stochastic", "em", "joint")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LearnerState:
+    """Everything a fit needs to continue: a pure pytree of arrays, so it
+    scans, donates, and checkpoints as one unit.
+
+    params: algorithm parameters — (L1, L2) factors for krk/joint,
+            (lam, V) eigendecomposition for em.
+    sweep:  () int32 — completed sweeps (resume offset).
+    key:    PRNG key driving minibatch selection.
+    sched:  schedule carry (t, last accepted a, backtrack count).
+    ll:     () float32 — last tracked log-likelihood (-inf if untracked).
+    """
+    params: Tuple[jax.Array, ...]
+    sweep: jax.Array
+    key: jax.Array
+    sched: schedules.ScheduleState
+    ll: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.sweep, self.key, self.sched, self.ll), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def select_minibatch(key: jax.Array, batch: SubsetBatch, size: int
+                     ) -> SubsetBatch:
+    """Uniform without-replacement minibatch, on device (jit-safe)."""
+    sel = jax.random.choice(key, batch.indices.shape[0], (size,),
+                            replace=False)
+    return SubsetBatch(batch.indices[sel], batch.mask[sel])
+
+
+class LearningEngine:
+    """Compiles epochs of KronDPP learning sweeps into single device calls.
+
+    One engine instance per (algorithm, schedule, options) config; the
+    compiled chunk is specialized per (batch shape, chunk length) by jit.
+    """
+
+    def __init__(self, algorithm: str = "krk",
+                 schedule: Optional[schedules.Schedule] = None,
+                 minibatch_size: Optional[int] = None,
+                 use_dense_theta: bool = False, fresh_theta: bool = True,
+                 ll_mode: str = "sweep", power_iters: int = 50):
+        if algorithm not in ALGORITHMS:
+            raise ValueError(f"algorithm must be one of {ALGORITHMS}, "
+                             f"got {algorithm!r}")
+        if ll_mode not in ("sweep", "chunk", "none"):
+            raise ValueError(f"ll_mode must be sweep|chunk|none, got {ll_mode!r}")
+        if schedule is None:
+            schedule = schedules.constant(1.0)
+        if schedule.kind == "armijo" and algorithm in ("em", "joint"):
+            raise ValueError("the Armijo schedule backtracks the KrK-Picard "
+                             "half-updates; use constant/inv_sqrt for "
+                             f"{algorithm}")
+        if algorithm == "krk-stochastic" and minibatch_size is None:
+            minibatch_size = 32
+        if algorithm != "krk-stochastic" and minibatch_size is not None:
+            raise ValueError(
+                f"minibatch_size is only consumed by krk-stochastic; "
+                f"got minibatch_size={minibatch_size} with {algorithm!r} "
+                "(api.fit auto-promotes krk to krk-stochastic)")
+        self.algorithm = algorithm
+        self.schedule = schedule
+        self.minibatch_size = minibatch_size
+        self.use_dense_theta = use_dense_theta
+        self.fresh_theta = fresh_theta
+        self.ll_mode = ll_mode
+        self.power_iters = power_iters
+
+        def chunk(state: LearnerState, batch: SubsetBatch, chunk_len: int):
+            def sweep_fn(st: LearnerState, _):
+                key, k_sel = jax.random.split(st.key)
+                sub = (select_minibatch(k_sel, batch, self.minibatch_size)
+                       if self.minibatch_size else batch)
+                a_trial = schedules.trial_step(self.schedule, st.sched)
+                params, a_acc, n_bt = self._sweep(st.params, sub, a_trial)
+                sched = schedules.advance(self.schedule, st.sched, a_acc, n_bt)
+                ll = (self._ll_value(params, batch)
+                      if self.ll_mode == "sweep" else st.ll)
+                st2 = LearnerState(tuple(params), st.sweep + 1, key, sched, ll)
+                return st2, ll
+
+            state, lls = jax.lax.scan(sweep_fn, state, None, length=chunk_len)
+            if self.ll_mode == "chunk":
+                state = dataclasses.replace(
+                    state, ll=self._ll_value(state.params, batch))
+            return state, lls
+
+        self._chunk = jax.jit(chunk, static_argnums=(2,), donate_argnums=(0,))
+        self._ll_jit = jax.jit(self._ll_value)
+
+    # -- objective -----------------------------------------------------------
+    def _ll_value(self, params, batch) -> jax.Array:
+        if self.algorithm == "em":
+            return log_likelihood_eig(params[0], params[1], batch)
+        return log_likelihood_factored(tuple(params), batch)
+
+    def log_likelihood(self, params, batch) -> float:
+        return float(self._ll_jit(tuple(jnp.asarray(p) for p in params), batch))
+
+    # -- one sweep -----------------------------------------------------------
+    def _sweep(self, params, sub: SubsetBatch, a_trial):
+        if self.algorithm == "em":
+            lam, V = params
+            q = e_step(lam, V, sub)
+            lam = m_step_eigvals(q)
+            V = eigvec_ascent(lam, V, sub, a_trial)
+            return (lam, V), a_trial, jnp.zeros((), jnp.int32)
+        if self.algorithm == "joint":
+            L1, L2 = params
+            L1, L2 = joint_picard_step(L1, L2, sub, a_trial, self.power_iters)
+            return (L1, L2), a_trial, jnp.zeros((), jnp.int32)
+        return self._krk_sweep(params, sub, a_trial)
+
+    def _krk_sweep(self, params, sub: SubsetBatch, a_trial):
+        """Alg. 1 sweep, op-for-op the math of ``core.krk_picard_step`` but
+        with the two half-updates exposed so a step size can be backtracked
+        against each precomputed ascent direction."""
+        L1, L2 = params
+        N1, N2 = L1.shape[0], L2.shape[0]
+        armijo = self.schedule.kind == "armijo"
+
+        A, C0 = compute_AC(L1, L2, sub, self.use_dense_theta)
+        d1, P1 = jnp.linalg.eigh(L1)
+        d2, P2 = jnp.linalg.eigh(L2)
+        alpha, beta0 = _alpha_beta(d1, d2)
+        G1 = L1 @ A @ L1 - (P1 * (d1 ** 2 * alpha)[None, :]) @ P1.T
+
+        def upd1(a):
+            Ln = L1 + (a / N2) * G1
+            return 0.5 * (Ln + Ln.T)
+
+        if armijo:
+            ll_ref = log_likelihood_factored((L1, L2), sub)
+            L1n, ll1, a1, bt1 = schedules.armijo_halfstep(
+                self.schedule, upd1,
+                lambda M: log_likelihood_factored((M, L2), sub),
+                ll_ref, a_trial)
+        else:
+            L1n, a1, bt1 = upd1(a_trial), a_trial, jnp.zeros((), jnp.int32)
+
+        if self.fresh_theta:
+            _, C = compute_AC(L1n, L2, sub, self.use_dense_theta)
+            _, beta = _alpha_beta(jnp.linalg.eigvalsh(L1n), d2)
+        else:
+            C, beta = C0, beta0
+        G2 = L2 @ C @ L2 - (P2 * beta[None, :]) @ P2.T
+
+        def upd2(a):
+            Ln = L2 + (a / N1) * G2
+            return 0.5 * (Ln + Ln.T)
+
+        if armijo:
+            L2n, _, a2, bt2 = schedules.armijo_halfstep(
+                self.schedule, upd2,
+                lambda M: log_likelihood_factored((L1n, M), sub),
+                ll1, a_trial)
+            return ((L1n, L2n), jnp.minimum(a1, a2), bt1 + bt2)
+        return (L1n, upd2(a_trial)), a_trial, jnp.zeros((), jnp.int32)
+
+    # -- state / driver ------------------------------------------------------
+    def init_state(self, params: Sequence[jax.Array],
+                   batch: Optional[SubsetBatch] = None, seed: int = 0,
+                   key: Optional[jax.Array] = None) -> LearnerState:
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        # copies, not views: the state is DONATED to the compiled chunk, and
+        # donation must never invalidate buffers the caller still owns.
+        key = jnp.array(key, copy=True)
+        params = tuple(jnp.array(p, copy=True) for p in params)
+        if batch is not None and self.ll_mode != "none":
+            ll = self._ll_jit(params, batch)
+        else:
+            ll = jnp.asarray(-jnp.inf, jnp.float32)
+        return LearnerState(params, jnp.zeros((), jnp.int32), key,
+                            schedules.init_state(self.schedule),
+                            jnp.asarray(ll, jnp.float32))
+
+    def run(self, state: LearnerState, batch: SubsetBatch, iters: int,
+            log_every: int = 1,
+            callback: Optional[Callable[[LearnerState], None]] = None
+            ) -> Tuple[LearnerState, List[float], List[int], List[float]]:
+        """Drive ``iters`` sweeps as ceil(iters/log_every) compiled chunks.
+
+        Returns (state, lls, ll_sweeps, chunk_times): ``lls[i]`` is the
+        log-likelihood after sweep ``ll_sweeps[i]`` (absolute, i.e. offset
+        by any resumed progress); ``chunk_times`` are host-visible seconds
+        per compiled chunk call.
+        """
+        log_every = max(1, int(log_every))
+        lls: List[float] = []
+        ll_sweeps: List[int] = []
+        times: List[float] = []
+        start = int(state.sweep)
+        done = 0
+        while done < iters:
+            n = min(log_every, iters - done)
+            t0 = time.perf_counter()
+            state, chunk_lls = self._chunk(state, batch, n)
+            jax.block_until_ready(state.params)
+            times.append(time.perf_counter() - t0)
+            done += n
+            if self.ll_mode == "sweep":
+                lls.extend(float(x) for x in np.asarray(chunk_lls))
+                ll_sweeps.extend(range(start + done - n + 1, start + done + 1))
+            elif self.ll_mode == "chunk":
+                lls.append(float(state.ll))
+                ll_sweeps.append(start + done)
+            if callback is not None:
+                callback(state)
+        return state, lls, ll_sweeps, times

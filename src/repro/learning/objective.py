@@ -1,0 +1,86 @@
+"""Batched factored log-likelihood — the engine's on-device objective.
+
+For a Kronecker kernel L = L_1 ⊗ ... ⊗ L_m and a padded subset batch,
+
+    phi(L) = (1/n) Σ_i log det(L_{Y_i}) - log det(I + L)
+
+is evaluated without ever materializing the N x N kernel:
+
+  * the subset logdets gather per-factor submatrix blocks (Hadamard
+    product of m (k, k) blocks) and Cholesky them, vmapped over the
+    batch — O(n (κ² m + κ³));
+  * log det(I + L) folds the per-factor spectra through
+    ``repro.sampling.spectral.log_product_spectrum`` (the same log-space
+    fold the sampling subsystem uses, so a huge product spectrum never
+    overflows) and reduces with a softplus — O(Σ N_i³) for the factor
+    ``eigh`` plus O(N) for the fold.
+
+This is what lets the learning engine track LL every sweep *inside*
+``lax.scan`` instead of paying a dense O(N³)/O(N²) host sync per step.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import kron
+from ..core.dpp import SubsetBatch, gather_submatrix, masked_inv_and_logdet
+from ..sampling.spectral import log_product_spectrum
+
+
+def masked_subset_logdet(sub: jax.Array, mask: jax.Array) -> jax.Array:
+    """log det of a masked (identity-padded) PD submatrix."""
+    m2 = jnp.outer(mask, mask)
+    eye = jnp.eye(sub.shape[0], dtype=sub.dtype)
+    _, ld = masked_inv_and_logdet(jnp.where(m2, sub, eye))
+    return ld
+
+
+def subset_logdets_factored(factors: Tuple[jax.Array, ...],
+                            batch: SubsetBatch) -> jax.Array:
+    """(n,) log det(L_{Y_i}) off the factors — never builds L."""
+    sizes = tuple(int(f.shape[0]) for f in factors)
+
+    def one(idx, mask):
+        parts = kron.split_indices_multi(idx, sizes)
+        sub = None
+        for f, p in zip(factors, parts):
+            blk = f[jnp.ix_(p, p)]
+            sub = blk if sub is None else sub * blk
+        return masked_subset_logdet(sub, mask)
+
+    return jax.vmap(one)(batch.indices, batch.mask)
+
+
+def logdet_I_plus_kron(factors: Tuple[jax.Array, ...]) -> jax.Array:
+    """log det(I + ⊗_i L_i) = Σ softplus(log λ) over the product spectrum.
+
+    Zero (clipped) factor eigenvalues map to -inf in the log fold, which
+    softplus sends to exactly 0 — the correct contribution of a null mode.
+    """
+    lams = tuple(jnp.maximum(jnp.linalg.eigvalsh(f), 0.0) for f in factors)
+    return jnp.sum(jax.nn.softplus(log_product_spectrum(lams)))
+
+
+def log_likelihood_factored(factors: Tuple[jax.Array, ...],
+                            batch: SubsetBatch) -> jax.Array:
+    """phi(⊗_i L_i) over a padded subset batch, fully device-resident."""
+    return (jnp.mean(subset_logdets_factored(factors, batch))
+            - logdet_I_plus_kron(factors))
+
+
+def log_likelihood_eig(lam: jax.Array, V: jax.Array,
+                       batch: SubsetBatch) -> jax.Array:
+    """phi(V diag(λ) V^T) for the EM parametrization: the subset logdets
+    gather from the (already dense) reconstruction, but log det(I + L)
+    comes free from the eigenvalues — no slogdet."""
+    L = (V * lam[None, :]) @ V.T
+
+    def one(idx, mask):
+        return masked_subset_logdet(L[jnp.ix_(idx, idx)], mask)
+
+    lds = jax.vmap(one)(batch.indices, batch.mask)
+    return jnp.mean(lds) - jnp.sum(jnp.log1p(jnp.maximum(lam, 0.0)))

@@ -1,0 +1,152 @@
+"""Step-size schedules for the Picard-family ascent updates.
+
+Three policies for the paper's step size ``a`` (Sec. 3.1.1):
+
+  constant   a_t = a0. Thm 3.2 guarantees monotone ascent for a <= 1 as
+             long as iterates stay PD; a0 > 1 often converges faster but
+             forfeits the guarantee.
+  inv_sqrt   a_t = a0 / sqrt(1 + t) — the classic stochastic decay for
+             minibatch sweeps.
+  armijo     device-side backtracking line search run per half-update
+             inside the compiled sweep (``lax.while_loop``): start from a
+             trial step, shrink until the candidate factor is PD *and*
+             the sweep-batch log-likelihood does not decrease. Because
+             Thm 3.2 holds at a <= 1 for PD iterates, the loop always
+             terminates with an accepted step — restoring the guarantee
+             while letting a_t float above 1 when the objective allows.
+
+The schedule config is a static (hashable) dataclass baked into the
+compiled sweep; the mutable part (``ScheduleState``) is a tiny pytree
+carried through ``lax.scan`` and checkpointed with the learner state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# fp slack on the ascent test: accept steps that hold LL to within
+# accumulation noise rather than demanding bitwise increase.
+_ASCENT_TOL = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Static schedule config. ``kind`` in {constant, inv_sqrt, armijo}."""
+    kind: str = "constant"
+    a0: float = 1.0
+    shrink: float = 0.5       # armijo: backtrack factor
+    grow: float = 1.3         # armijo: re-expansion after acceptance
+    max_backtracks: int = 8   # armijo: trials per half-update
+
+
+def constant(a0: float = 1.0) -> Schedule:
+    return Schedule("constant", a0=a0)
+
+
+def inv_sqrt(a0: float = 1.0) -> Schedule:
+    return Schedule("inv_sqrt", a0=a0)
+
+
+def armijo(a0: float = 1.5, shrink: float = 0.5, grow: float = 1.3,
+           max_backtracks: int = 8) -> Schedule:
+    return Schedule("armijo", a0=a0, shrink=shrink, grow=grow,
+                    max_backtracks=max_backtracks)
+
+
+def by_name(name: str, a0: float = 1.0) -> Schedule:
+    """CLI-friendly constructor (accepts {constant, inv_sqrt, armijo})."""
+    name = name.replace("-", "_")
+    if name not in ("constant", "inv_sqrt", "armijo"):
+        raise ValueError(f"unknown schedule {name!r}")
+    return Schedule(name, a0=a0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ScheduleState:
+    """Per-fit schedule carry: sweep counter, last accepted step, and the
+    cumulative number of Armijo backtracks (diagnostics)."""
+    t: jax.Array
+    a: jax.Array
+    backtracks: jax.Array
+
+    def tree_flatten(self):
+        return (self.t, self.a, self.backtracks), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_state(sched: Schedule) -> ScheduleState:
+    return ScheduleState(jnp.zeros((), jnp.float32),
+                         jnp.asarray(sched.a0, jnp.float32),
+                         jnp.zeros((), jnp.int32))
+
+
+def trial_step(sched: Schedule, state: ScheduleState) -> jax.Array:
+    """The step size to (try to) use on sweep t."""
+    if sched.kind == "constant":
+        return jnp.asarray(sched.a0, jnp.float32)
+    if sched.kind == "inv_sqrt":
+        return sched.a0 / jnp.sqrt(1.0 + state.t)
+    # armijo: re-expand from the last accepted step, capped at a0. a = 0
+    # records a fully-failed sweep (all trials rejected); retry from a0
+    # rather than letting 0 absorb the schedule (0 * grow == 0 forever).
+    return jnp.where(state.a > 0.0,
+                     jnp.minimum(jnp.asarray(sched.a0, jnp.float32),
+                                 state.a * sched.grow),
+                     jnp.asarray(sched.a0, jnp.float32))
+
+
+def advance(sched: Schedule, state: ScheduleState, accepted_a: jax.Array,
+            n_backtracks: jax.Array) -> ScheduleState:
+    return ScheduleState(state.t + 1.0, accepted_a.astype(jnp.float32),
+                         state.backtracks + n_backtracks.astype(jnp.int32))
+
+
+def armijo_halfstep(sched: Schedule,
+                    update_fn: Callable[[jax.Array], jax.Array],
+                    ll_fn: Callable[[jax.Array], jax.Array],
+                    ll_ref: jax.Array, a_trial: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One backtracked half-update, fully on device.
+
+    ``update_fn(a)`` produces the candidate factor for step size ``a``
+    (the ascent direction is precomputed by the caller, so each trial is
+    one AXPY + symmetrization); acceptance requires the candidate to be
+    PD and ``ll_fn`` not to decrease below ``ll_ref``. Returns
+    (factor, ll, a_used, n_backtracks); if every trial fails, the factor
+    is left unchanged (a_used = 0), which is always a safe fixed point.
+    """
+    L_orig = update_fn(jnp.zeros_like(a_trial))   # == current factor
+
+    def evaluate(a):
+        cand = update_fn(a)
+        lam_min = jnp.linalg.eigvalsh(cand)[0]
+        ll = ll_fn(cand)
+        ok = (lam_min > 0.0) & (ll >= ll_ref - _ASCENT_TOL) & jnp.isfinite(ll)
+        return cand, ll, ok
+
+    cand0, ll0, ok0 = evaluate(a_trial)
+
+    def cond(carry):
+        _, _, ok, _, k = carry
+        return (~ok) & (k < sched.max_backtracks)
+
+    def body(carry):
+        a, _, _, _, k = carry
+        a = a * sched.shrink
+        cand, ll, ok = evaluate(a)
+        return a, cand, ok, ll, k + 1
+
+    a, cand, ok, ll, k = jax.lax.while_loop(
+        cond, body, (a_trial, cand0, ok0, ll0, jnp.zeros((), jnp.int32)))
+    L_new = jnp.where(ok, cand, L_orig)
+    ll_new = jnp.where(ok, ll, ll_ref)
+    a_used = jnp.where(ok, a, 0.0)
+    return L_new, ll_new, a_used, k

@@ -26,7 +26,7 @@ service.py   ``SamplingService`` — micro-batching front-end (submit →
 """
 
 from .spectral import (FactorSpectrum, SpectralCache, default_cache,
-                       log_product_spectrum)
+                       log_product_spectrum, rescale_expected_size)
 from .batched import (compile_cache_size, picks_to_lists,
                       sample_krondpp_batched)
 from .kdpp import log_esp_table, sample_kdpp_batched, sample_kdpp_dense
@@ -34,7 +34,7 @@ from .service import SamplingService, SampleTicket
 
 __all__ = [
     "FactorSpectrum", "SpectralCache", "default_cache",
-    "log_product_spectrum",
+    "log_product_spectrum", "rescale_expected_size",
     "sample_krondpp_batched", "picks_to_lists", "compile_cache_size",
     "log_esp_table", "sample_kdpp_batched", "sample_kdpp_dense",
     "SamplingService", "SampleTicket",
