@@ -1,0 +1,77 @@
+"""Facade-level microbenchmark: the public ``repro.dpp`` API, dense vs kron.
+
+Times ``model.sample`` (batched exact DPP draw, one device call) and
+``model.log_prob`` (factored objective) for a ``Kron`` model and the
+``Dense`` model over the *same* kernel across N, so the perf trajectory of
+the public entry points — not just the engine internals — is tracked in
+CI. The spectrum is pre-warmed through the shared cache (as in serving);
+compile time is excluded (one warmup call per shape).
+
+JSON is written to ``benchmarks/reports/facade_api.json`` for trend
+tracking.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.dpp import Dense, SpectralCache, random_kron
+from .common import json_report, timed
+
+SIZES = ((8, 8), (16, 16), (32, 32))     # N = 64 .. 1024
+TARGET_E = 8.0
+BATCH = 64
+N_SUBSETS = 64
+
+REPORT_PATH = os.path.join(os.path.dirname(__file__), "reports",
+                           "facade_api.json")
+
+
+def run(seed: int = 0) -> dict:
+    rows = []
+    cache = SpectralCache()
+    for sizes in SIZES:
+        kron = random_kron(jax.random.PRNGKey(seed), sizes) \
+            .rescale(TARGET_E, cache=cache)
+        dense = Dense(kron.dense_kernel())
+        key = jax.random.PRNGKey(seed + 1)
+        batch = kron.sample(key, N_SUBSETS, cache=cache)
+
+        row = {"N": kron.N, "sizes": list(sizes)}
+        for name, model in (("kron", kron), ("dense", dense)):
+            model.spectrum(cache)            # pre-warm eigh, as in serving
+            t_sample, _ = timed(model.sample, key, BATCH,
+                                cache=cache, repeats=4)
+            t_logp, _ = timed(model.log_prob, batch, cache=cache, repeats=4)
+            row[f"{name}_sample_us"] = t_sample / BATCH * 1e6
+            row[f"{name}_log_prob_us"] = t_logp / N_SUBSETS * 1e6
+        row["sample_kron_speedup"] = (row["dense_sample_us"]
+                                      / row["kron_sample_us"])
+        rows.append(row)
+    return {"batch": BATCH, "n_subsets": N_SUBSETS, "E_size": TARGET_E,
+            "rows": rows, "spectral_cache": cache.stats()}
+
+
+def main():
+    res = run()
+    for r in res["rows"]:
+        print(f"facade_api,sample_kron_N{r['N']},{r['kron_sample_us']:.0f},"
+              f"dense {r['dense_sample_us']:.0f}us/sample; "
+              f"kron {r['sample_kron_speedup']:.1f}x")
+        print(f"facade_api,log_prob_kron_N{r['N']},"
+              f"{r['kron_log_prob_us']:.0f},"
+              f"dense {r['dense_log_prob_us']:.0f}us/subset")
+    json_report("facade_api", res)
+    os.makedirs(os.path.dirname(REPORT_PATH), exist_ok=True)
+    with open(REPORT_PATH, "w") as f:
+        json.dump({"bench": "facade_api", **res}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

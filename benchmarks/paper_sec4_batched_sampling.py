@@ -16,7 +16,8 @@ import jax
 import numpy as np
 
 from repro.core import random_krondpp, sample_krondpp
-from repro.sampling import SpectralCache, sample_krondpp_batched
+from repro.sampling import SpectralCache
+from repro.sampling.batched import sample_krondpp_batched
 from .common import json_report, rescale_expected_size
 
 SIZES = (32, 32)          # N = 1024, the m=2 O(N^{3/2}) regime
@@ -60,7 +61,10 @@ def run(seed: int = 0) -> dict:
             "speedup": host_per_sample / dev_per_sample,
         })
     return {"N": int(np.prod(SIZES)), "k_max": int(k_max),
-            "E_size": TARGET_E, "rows": rows}
+            "E_size": TARGET_E, "rows": rows,
+            # cache observability: the whole run should cost exactly one
+            # eigh per factor (misses == m, zero evictions)
+            "spectral_cache": cache.stats()}
 
 
 def main():

@@ -11,10 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (SubsetBatch, fit_em, fit_krk_picard, fit_picard,
-                        log_likelihood, random_krondpp)
+from repro.core import SubsetBatch, fit_picard, log_likelihood, random_krondpp
 from repro.core.dpp import marginal_kernel
 from repro.core import kron as K
+from repro.dpp import Dense, Kron
 from .common import gaussian_kernel_data
 
 
@@ -36,16 +36,15 @@ def run(N1=10, N2=10, n_train=80, n_test=40, iters=10, seed=0):
     sgn = jnp.sign(U[0, 0])
     L1 = sgn * jnp.sqrt(s) * U + 1e-3 * jnp.eye(N1)
     L2 = sgn * jnp.sqrt(s) * V + 1e-3 * jnp.eye(N2)
-    from repro.core import KronDPP
-    init_kron = KronDPP((L1, L2))
+    init_kron = Kron((L1, L2))
 
-    em = fit_em(L0, train, iters=iters, lr=1e-3)
+    em = Dense(L0).fit(train, algorithm="em", iters=iters, a=1e-3)
     pic = fit_picard(L0, train, iters=iters, a=1.3)
-    krk = fit_krk_picard(init_kron, train, iters=iters, a=1.8)
+    krk = init_kron.fit(train, algorithm="krk", iters=iters, a=1.8)
 
     rows = []
-    for name, Lfin in (("em", em.L), ("picard", pic.L),
-                       ("krk_picard", krk.model.full_matrix())):
+    for name, Lfin in (("em", em.model.L), ("picard", pic.L),
+                       ("krk_picard", krk.model.dense_kernel())):
         rows.append({
             "algo": name,
             "train_ll": float(log_likelihood(jnp.asarray(Lfin), train)),

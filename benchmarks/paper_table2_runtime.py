@@ -12,25 +12,26 @@ import time
 import jax
 import numpy as np
 
-from repro.core import fit_krk_picard, fit_picard, random_krondpp
+from repro.core import fit_picard
+from repro.dpp import random_kron
 from .common import gaussian_kernel_data
 
 
 def run(N1=32, N2=32, n=24, seed=0):
     batch = gaussian_kernel_data(N1, N2, n, 16, 40, seed=seed)
-    init = random_krondpp(jax.random.PRNGKey(seed + 3), (N1, N2))
+    init = random_kron(jax.random.PRNGKey(seed + 3), (N1, N2))
 
-    krk = fit_krk_picard(init, batch, iters=3, a=1.0)
-    krk_s = fit_krk_picard(init, batch, iters=3, a=1.0, minibatch_size=4)
-    pic = fit_picard(init.full_matrix(), batch, iters=3, a=1.0)
+    krk = init.fit(batch, algorithm="krk", iters=3, a=1.0)
+    krk_s = init.fit(batch, iters=3, a=1.0, minibatch_size=4)
+    pic = fit_picard(init.dense_kernel(), batch, iters=3, a=1.0)
 
     def gain(res):
         return res.log_likelihoods[1] - res.log_likelihoods[0]
 
     return {
         "picard_s": float(np.mean(pic.step_times)),
-        "krk_s": float(np.mean(krk.step_times)),
-        "krk_stoch_s": float(np.mean(krk_s.step_times)),
+        "krk_s": float(np.mean(krk.sweep_times)),
+        "krk_stoch_s": float(np.mean(krk_s.sweep_times)),
         "picard_gain": float(gain(pic)),
         "krk_gain": float(gain(krk)),
         "krk_stoch_gain": float(gain(krk_s)),

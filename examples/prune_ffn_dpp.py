@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import dpp
 from repro.configs import smoke_config
-from repro.core.sampling import greedy_map_kdpp
 from repro.models import LM
 from repro.models.transformer import dense_ffn
 
@@ -30,10 +30,10 @@ acts = swiglu(h @ p_ffn["w_gate"], h @ p_ffn["w_up"])       # (B,S,f)
 A = acts.reshape(-1, cfg.d_ff)
 
 keep = cfg.d_ff // 2
-# DPP kernel over hidden units: normalized activation similarity
+# DPP model over hidden units: normalized activation similarity kernel
 An = A / (jnp.linalg.norm(A, axis=0, keepdims=True) + 1e-6)
-L = An.T @ An + 1e-4 * jnp.eye(cfg.d_ff)
-dpp_idx = np.sort(np.asarray(greedy_map_kdpp(L, keep)))
+units = dpp.from_kernel(An.T @ An + 1e-4 * jnp.eye(cfg.d_ff))
+dpp_idx = np.sort(np.asarray(units.map(keep)))
 
 # magnitude baseline
 mag_idx = np.sort(np.asarray(

@@ -1,6 +1,7 @@
-"""Quickstart: build a KronDPP, sample from it exactly with the batched
-device-resident subsystem, and learn the factored kernel back from the
-samples with KrK-Picard (paper Alg. 1).
+"""Quickstart for the ``repro.dpp`` facade: build a Kronecker DPP model,
+sample from it exactly on device, learn the factored kernel back from the
+samples, condition on observed items, and take a greedy MAP subset — all
+through one model object.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,31 +11,46 @@ import time
 import jax
 import numpy as np
 
-from repro.core import SubsetBatch, fit_krk_picard, random_krondpp
-from repro.sampling import SamplingService
+from repro import dpp
 
-# 1) a ground-truth KronDPP over N = 20 x 25 = 500 items
-true = random_krondpp(jax.random.PRNGKey(7), (20, 25))
-print(f"ground set N = {true.N}, factors {true.sizes}")
+# 1) a ground-truth Kronecker model over N = 20 x 25 = 500 items, rescaled
+#    so samples average ~10 items
+true = dpp.random_kron(jax.random.PRNGKey(7), (20, 25)).rescale(10.0)
+print(f"ground set N = {true.N}, factors {true.sizes}, "
+      f"E|Y| = {true.expected_size():.1f}")
 
-# 2) exact sampling — the SamplingService eigendecomposes the factors once
-#    (O(N1^3 + N2^3), cached) and draws all 80 samples in one jit+vmap
-#    device call; L itself is never materialized
-svc = SamplingService(true, seed=0)
+# 2) exact sampling — the spectrum is eigendecomposed once per factor
+#    (O(N1^3 + N2^3), cached) and all 80 draws happen in one jit+vmap
+#    device call; the N x N kernel is never materialized
 t0 = time.perf_counter()
-samples = [s for s in svc.sample(80) if s]
+batch = true.sample(jax.random.PRNGKey(0), 80)
+sizes = np.asarray(batch.sizes())        # host sync — include it in the time
 dt = time.perf_counter() - t0
-sizes = [len(s) for s in samples]
-print(f"drew {len(samples)} exact samples in {dt * 1e3:.0f} ms "
-      f"({svc.stats.device_calls} device call(s)), |Y| in "
-      f"[{min(sizes)}, {max(sizes)}], mean {np.mean(sizes):.1f}")
+print(f"drew {batch.n} exact samples in {dt * 1e3:.0f} ms, |Y| in "
+      f"[{sizes.min()}, {sizes.max()}], mean {sizes.mean():.1f}")
 
-# 3) learn a fresh KronDPP from the samples (monotone ascent, Thm. 3.2)
-batch = SubsetBatch.from_lists(samples)
-init = random_krondpp(jax.random.PRNGKey(3), (20, 25))
-res = fit_krk_picard(init, batch, iters=10, a=1.0)
-lls = res.log_likelihoods
+# 3) per-subset probabilities and marginals off the same spectrum
+logp = np.asarray(true.log_prob(batch))
+print(f"log P(Y): mean {logp.mean():.2f}, best {logp.max():.2f}")
+print(f"P(0 in Y) = {float(true.marginal(0)):.3f}, "
+      f"P({{0,1}} ⊆ Y) = {float(true.marginal([0, 1])):.4f}")
+
+# 4) learn a fresh Kronecker kernel from the samples (KrK-Picard, Alg. 1;
+#    the Armijo schedule guarantees PSD factors + monotone ascent)
+init = dpp.random_kron(jax.random.PRNGKey(3), (20, 25))
+rep = init.fit(batch, algorithm="krk", iters=10,
+               schedule=dpp.schedules.armijo(a0=1.0))
+lls = rep.log_likelihoods
 print("log-likelihood:", " -> ".join(f"{v:.2f}" for v in lls[::3]))
 assert all(b >= a - 1e-3 for a, b in zip(lls, lls[1:])), "ascent violated!"
-print("monotone ascent verified; mean step time "
-      f"{np.mean(res.step_times) * 1e3:.1f} ms")
+print(f"monotone ascent verified over {rep.sweeps} sweeps "
+      f"({rep.sweeps_per_sec:.0f} sweeps/s)")
+model = rep.model
+
+# 5) closure operations: condition on observed items (the conditional is a
+#    new model over the remaining ground set) and take a greedy MAP subset
+observed = [0, 1]
+cond = model.condition(observed)
+print(f"conditioned on {observed}: new ground set of {cond.N} items, "
+      f"E|Y'| = {cond.expected_size():.1f}")
+print("greedy MAP-10:", sorted(int(i) for i in model.map(10)))

@@ -2,7 +2,7 @@
 after prefill, the cache is compacted to a diversity-preserving subset
 (Diversity Networks [26] applied to tokens) before decode continues.
 Compaction here uses the *exact* k-DPP sampler from the batched
-``repro.sampling`` subsystem (method="sample") rather than the
+machinery behind the ``repro.dpp`` facade (method="sample") rather than the
 deterministic greedy MAP, de-biasing eviction across heads.
 
     PYTHONPATH=src python examples/serve_kv_compaction.py
@@ -67,5 +67,5 @@ for _ in range(12):
 print(f"compacted decode: cache {S} -> {budget} slots/layer; "
       f"generated {np.stack(outs, 1).shape} tokens")
 print("note: compaction keeps a diverse + recent token subset per kv-head "
-      "(exact k-DPP sample via repro.sampling; method='map' gives the "
-      "deterministic greedy_map Pallas-kernel path)")
+      "(exact k-DPP sample via repro.dpp.functional; method='map' gives "
+      "the deterministic greedy_map Pallas-kernel path)")

@@ -1,9 +1,9 @@
 """End-to-end driver: train a (reduced) qwen2-0.5b for a few hundred steps
 with KronDPP diverse minibatch selection — the paper's model running inside
 the training data pipeline. Before training, the selection kernel is
-calibrated by maximum likelihood on its own observed diverse batches with
-the device-resident learning engine (``repro.learning``): KrK-Picard sweeps
-under the Armijo schedule, so the refined factors are guaranteed PSD.
+calibrated by maximum likelihood on its own observed diverse batches through
+the ``repro.dpp`` facade (``model.fit``): KrK-Picard sweeps under the
+Armijo schedule, so the refined factors are guaranteed PSD.
 
     PYTHONPATH=src python examples/train_dpp_selection.py [--steps 200]
 """
@@ -17,7 +17,7 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.core import SubsetBatch
 from repro.data import DPPBatchSelector, TokenPipeline, synthetic_corpus
-from repro.learning import schedules
+from repro.dpp import schedules
 from repro.models import LM
 from repro.optim import AdamW, cosine_schedule
 from repro.train import Trainer, TrainerConfig, make_train_step

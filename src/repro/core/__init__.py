@@ -1,10 +1,14 @@
-"""KronDPP core — the paper's contribution as a composable JAX module.
+"""KronDPP core — the paper's algorithms as composable JAX building blocks.
 
-Public API:
+NOTE: the public, model-centric API is the ``repro.dpp`` facade
+(``Dense`` / ``Kron`` with sample / log_prob / marginal / condition /
+map / fit). This package holds the math it is built from:
     KronDPP, SubsetBatch
-    kron (algebra), sampling (exact samplers, greedy MAP)
+    kron (algebra), sampling (host reference oracle, greedy MAP)
     krk_picard (Alg. 1), joint_picard (Alg. 3), picard ([25]), em ([10])
     clustering (Sec. 3.3 greedy SUKP)
+The ``fit_*`` drivers and ``sample_krondpp_batch`` here are deprecated
+shims that warn and delegate to the engines behind the facade.
 """
 
 from . import kron, dpp, sampling, clustering

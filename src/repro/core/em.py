@@ -73,9 +73,16 @@ class EMResult:
 
 def fit_em(L0: jax.Array, batch: SubsetBatch, iters: int = 10, lr: float = 1e-2,
            track_ll: bool = True) -> EMResult:
-    """DEPRECATED: thin delegate into ``repro.learning.fit(algorithm="em")``
-    (the scan-compiled engine). The E/M/ascent sweep is unchanged; it now
-    runs inside one compiled chunk per tracked step."""
+    """.. deprecated::
+        Thin delegate into ``repro.learning.fit(algorithm="em")`` (the
+        scan-compiled engine); use ``repro.dpp.Dense(L).fit(batch)`` — the
+        facade. The E/M/ascent sweep is unchanged; it now runs inside one
+        compiled chunk per tracked step."""
+    import warnings
+    warnings.warn(
+        "core.fit_em is deprecated; use "
+        "repro.dpp.Dense(L).fit(batch, algorithm='em') instead",
+        DeprecationWarning, stacklevel=2)
     from ..learning.api import fit as _fit
 
     rep = _fit(L0, batch, algorithm="em", iters=iters, a=lr,

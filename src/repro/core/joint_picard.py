@@ -63,8 +63,15 @@ class JointResult:
 
 def fit_joint_picard(model: KronDPP, batch: SubsetBatch, iters: int = 10,
                      a: float = 1.0, track_ll: bool = True) -> JointResult:
-    """DEPRECATED: thin delegate into ``repro.learning.fit(algorithm="joint")``
-    (the scan-compiled engine)."""
+    """.. deprecated::
+        Thin delegate into ``repro.learning.fit(algorithm="joint")`` (the
+        scan-compiled engine); use
+        ``repro.dpp.Kron(factors).fit(batch, algorithm='joint')``."""
+    import warnings
+    warnings.warn(
+        "core.fit_joint_picard is deprecated; use "
+        "repro.dpp.Kron(factors).fit(batch, algorithm='joint') instead",
+        DeprecationWarning, stacklevel=2)
     from ..learning.api import fit as _fit
 
     rep = _fit(model, batch, algorithm="joint", iters=iters, a=a,

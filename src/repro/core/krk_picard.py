@@ -202,13 +202,20 @@ def fit_krk_picard(model: KronDPP, batch: SubsetBatch, iters: int = 10,
                    fresh_theta: bool = True) -> FitResult:
     """Run Alg. 1 (batch, or stochastic if minibatch_size is set).
 
-    DEPRECATED: thin delegate into ``repro.learning.fit`` (the
-    scan-compiled engine); prefer calling that directly for schedules,
-    chunked LL tracking, checkpointing and the distributed mode. Note the
-    stochastic path now selects minibatches on device from a
-    ``jax.random`` stream, so for a given ``seed`` the draws differ from
-    the old host-numpy rng (the distribution is identical).
+    .. deprecated::
+        Thin delegate into ``repro.learning.fit`` (the scan-compiled
+        engine); call ``repro.dpp.Kron(factors).fit(batch, ...)`` — the
+        facade — for schedules, chunked LL tracking, checkpointing and
+        the distributed mode. Note the stochastic path now selects
+        minibatches on device from a ``jax.random`` stream, so for a
+        given ``seed`` the draws differ from the old host-numpy rng (the
+        distribution is identical).
     """
+    import warnings
+    warnings.warn(
+        "core.fit_krk_picard is deprecated; use "
+        "repro.dpp.Kron(factors).fit(batch, algorithm='krk') instead",
+        DeprecationWarning, stacklevel=2)
     from ..learning.api import fit as _fit
 
     rep = _fit(model, batch,

@@ -113,16 +113,21 @@ def sample_krondpp(rng: np.random.Generator, dpp: KronDPP) -> List[int]:
 
 def sample_krondpp_batch(key: jax.Array, dpp: KronDPP, num_samples: int,
                          k_max: Optional[int] = None) -> List[List[int]]:
-    """Batched device sampling — delegates to :mod:`repro.sampling`.
+    """Batched device sampling — delegates to the batched subsystem.
 
-    One jit+vmap device call for all ``num_samples`` draws, factor
-    eigendecompositions amortized through the process-wide SpectralCache.
-    Prefer constructing a ``repro.sampling.SamplingService`` directly for
-    repeated use; this wrapper exists so ``core``-level callers migrate
-    without importing the subsystem.
+    .. deprecated::
+        Use the ``repro.dpp`` facade:
+        ``Kron(factors).sample(key, num_samples)`` (one jit+vmap device
+        call, spectra amortized in the SpectralCache), or
+        ``model.service()`` for repeated micro-batched use.
     """
-    from ..sampling import (default_cache, picks_to_lists,
-                            sample_krondpp_batched)
+    import warnings
+    warnings.warn(
+        "core.sample_krondpp_batch is deprecated; use "
+        "repro.dpp.Kron(factors).sample(key, num_samples) instead",
+        DeprecationWarning, stacklevel=2)
+    from ..sampling.batched import picks_to_lists, sample_krondpp_batched
+    from ..sampling.spectral import default_cache
     spec = default_cache().spectrum(dpp)
     picks, _ = sample_krondpp_batched(key, spec, k_max, num_samples)
     return picks_to_lists(picks)

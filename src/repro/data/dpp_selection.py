@@ -1,5 +1,5 @@
 """KronDPP diverse minibatch selection — the paper's model as a first-class
-data-pipeline feature.
+data-pipeline feature, built on the ``repro.dpp`` facade.
 
 Ground set = the N = N1 x N2 training documents, factored as N1 shards x N2
 offsets. L1 models inter-shard similarity (e.g. topic centroids), L2
@@ -7,16 +7,14 @@ intra-shard similarity. Exact sampling costs O(N1^3 + N2^3 + N k^3) per batch
 (paper Sec. 4).
 
 Two backends:
-  "device" (default) — the batched subsystem (``repro.sampling``): the
-      factor eigendecompositions are cached once in a SpectralCache and
-      ``prefetch`` samples are drawn per vmapped device call into a FIFO
-      buffer, so steady-state selection is one device call every
-      ``prefetch`` batches.
-  "host" — the original per-call numpy sampler, kept as the reference
-      oracle.
+  "device" (default) — ``model.service()``: the factor eigendecompositions
+      are cached once in a SpectralCache and ``prefetch`` samples are drawn
+      per vmapped device call into a FIFO buffer, so steady-state selection
+      is one device call every ``prefetch`` batches.
+  "host" — ``model.sample(backend="host")``, the numpy reference oracle.
 
 The factor kernels can be LEARNED from batches that trained well (any subset
-signal) with KrK-Picard — `fit_from_subsets` wires that in.
+signal) via ``model.fit`` — `fit_from_subsets` wires that in.
 """
 
 from __future__ import annotations
@@ -28,9 +26,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core.krondpp import KronDPP
-from ..core.sampling import sample_krondpp
 from ..core.dpp import SubsetBatch
+from ..dpp import Kron
 
 
 def _rbf_kernel(X: np.ndarray, gamma: Optional[float] = None,
@@ -43,7 +40,7 @@ def _rbf_kernel(X: np.ndarray, gamma: Optional[float] = None,
 @dataclasses.dataclass
 class DPPBatchSelector:
     """Samples diverse doc indices from a KronDPP over the corpus."""
-    dpp: KronDPP
+    dpp: Kron                    # the facade model over the corpus
     n1: int
     n2: int
     backend: str = "device"      # "device" (batched subsystem) or "host"
@@ -65,7 +62,7 @@ class DPPBatchSelector:
         L1 = _rbf_kernel(F.mean(axis=1)) * scale
         L2 = _rbf_kernel(F.mean(axis=0)) * scale
         return DPPBatchSelector(
-            KronDPP((jnp.asarray(L1, jnp.float32), jnp.asarray(L2, jnp.float32))),
+            Kron((jnp.asarray(L1, jnp.float32), jnp.asarray(L2, jnp.float32))),
             n1, n2, backend=backend)
 
     # -- sampling ------------------------------------------------------------
@@ -77,14 +74,17 @@ class DPPBatchSelector:
 
     def _draw_subset(self, rng: np.random.Generator) -> np.ndarray:
         if self.backend == "host":
-            return np.asarray(sample_krondpp(rng, self.dpp), np.int64)
+            # key derived from the pipeline rng stream keeps restore/replay
+            # deterministic, same as the device service seed below
+            key = jax.random.PRNGKey(int(rng.integers(2 ** 31)))
+            sub = self.dpp.sample(key, backend="host").to_lists()[0]
+            return np.asarray(sub, np.int64)
         if not self._buffer:
             if self._service is None:
-                from ..sampling import SamplingService
                 # Service PRNG is derived from the pipeline rng stream, so
                 # restore/replay reproduces the same device draws.
-                self._service = SamplingService(
-                    self.dpp, seed=int(rng.integers(2 ** 31)))
+                self._service = self.dpp.service(
+                    seed=int(rng.integers(2 ** 31)))
             self._buffer = self._service.sample(self.prefetch)
         return np.asarray(self._buffer.pop(0), np.int64)
 
@@ -106,17 +106,16 @@ class DPPBatchSelector:
                          schedule=None, log_every: int = 0,
                          ) -> "DPPBatchSelector":
         """Adapt the kernels to observed 'good' batches via KrK-Picard,
-        run through the device-resident ``repro.learning`` engine (batch,
-        or stochastic when ``minibatch_size`` is set; pass a
-        ``learning.schedules`` schedule — e.g. ``armijo()`` — to guarantee
-        PSD factors + monotone ascent)."""
-        from ..learning import fit
+        run through ``model.fit`` (batch, or stochastic when
+        ``minibatch_size`` is set; pass a ``repro.dpp.schedules`` schedule
+        — e.g. ``armijo()`` — to guarantee PSD factors + monotone ascent)."""
         k_max = max(len(s) for s in subsets)
         batch = SubsetBatch.from_lists(subsets, k_max)
-        rep = fit(self.dpp, batch,
-                  algorithm="krk" if minibatch_size is None
-                  else "krk-stochastic",
-                  iters=iters, a=a, schedule=schedule,
-                  minibatch_size=minibatch_size, track_ll=log_every > 0,
-                  log_every=log_every or iters)
+        rep = self.dpp.fit(batch,
+                           algorithm="krk" if minibatch_size is None
+                           else "krk-stochastic",
+                           iters=iters, a=a, schedule=schedule,
+                           minibatch_size=minibatch_size,
+                           track_ll=log_every > 0,
+                           log_every=log_every or iters)
         return dataclasses.replace(self, dpp=rep.model)

@@ -1,0 +1,46 @@
+"""repro.dpp — the one model-centric probabilistic API for this repo.
+
+A DPP is a model, not a bag of free functions. Build one, then ask it for
+everything the literature treats as table stakes (cf. DPPy's unified
+object API, arXiv:1809.07258):
+
+    import jax
+    from repro import dpp
+
+    model = dpp.random_kron(jax.random.PRNGKey(0), (20, 25))   # N = 500
+    model = model.rescale(expected_size=10.0)
+
+    batch = model.sample(jax.random.PRNGKey(1), 64)    # exact, one device call
+    logp  = model.log_prob(batch)                      # (64,) per-subset
+    p_i   = model.marginal(3)                          # P(3 in Y)
+    p_ij  = model.marginal([3, 7])                     # P({3,7} ⊆ Y)
+    cond  = model.condition([3, 7])                    # new model, A ⊆ Y given
+    mapset = model.map(k=10)                           # greedy MAP subset
+    report = model.fit(batch, algorithm="krk",         # compiled learning
+                       schedule=dpp.schedules.armijo())
+
+``Dense(L)`` and ``Kron(factors)`` implement one shared protocol
+(``DPPModel``); a dense kernel is just the one-factor case of the factored
+machinery, so both ride the same device-resident pipelines
+(``repro.sampling``, ``repro.learning``) and the same ``SpectralCache``.
+In-trace consumers (vmapped serving paths) use ``repro.dpp.functional``.
+
+The pre-facade free functions (``core.sample_krondpp_batch``,
+``core.fit_krk_picard``, bare ``repro.sampling.sample_*``) are deprecated
+shims onto this API.
+"""
+
+from ..learning import schedules
+from ..sampling.service import SampleTicket, SamplingService
+from ..sampling.spectral import FactorSpectrum, SpectralCache, default_cache
+from . import functional
+from .model import (MAX_DENSE_N, Dense, DPPModel, Kron, from_factors,
+                    from_kernel, random_kron)
+
+__all__ = [
+    "DPPModel", "Dense", "Kron", "MAX_DENSE_N",
+    "from_kernel", "from_factors", "random_kron",
+    "functional", "schedules",
+    "FactorSpectrum", "SpectralCache", "default_cache",
+    "SamplingService", "SampleTicket",
+]

@@ -1,0 +1,20 @@
+"""Trace-safe building blocks behind the ``repro.dpp`` facade.
+
+The facade models in ``repro.dpp.model`` are host-level objects: they make
+static-shape decisions (phase-2 budgets, batch rounding) off concrete
+spectra, so they cannot be constructed inside a jit trace. Consumers that
+run *inside* a trace — the serving layer vmaps k-DPP eviction per
+(batch, kv-head), for example — use these pure functions instead. They are
+the exact primitives the facade itself dispatches to, re-exported here so
+every layer routes through ``repro.dpp`` without reaching into subsystem
+internals.
+"""
+
+from ..kernels.ops import greedy_map_kdpp
+from ..sampling.batched import sample_krondpp_batched
+from ..sampling.kdpp import sample_kdpp_batched, sample_kdpp_dense
+
+__all__ = [
+    "greedy_map_kdpp",
+    "sample_kdpp_dense", "sample_kdpp_batched", "sample_krondpp_batched",
+]

@@ -1,15 +1,16 @@
-"""KronDPP learning launcher: the paper's Sec. 3 learners end to end.
+"""KronDPP learning launcher: the paper's Sec. 3 learners end to end,
+driven entirely through the ``repro.dpp`` facade.
 
 Single-process usage (CPU smoke):
     PYTHONPATH=src python -m repro.launch.learn --n1 16 --n2 16 \
         --subsets 128 --algorithm krk-stochastic --minibatch 32 \
         --iters 40 --schedule armijo --log-every 10
 
-Training data is drawn from a ground-truth KronDPP with the device-resident
-sampling subsystem (one vmapped call for the whole dataset), then the chosen
-learner runs through ``repro.learning.fit`` — scan-compiled chunks,
-checkpoint/resume, and (with --distributed, under forced host devices or a
-real fleet) the mesh-sharded KrK step.
+Training data is drawn from a ground-truth model with ``model.sample`` (one
+vmapped device call for the whole dataset), then the chosen learner runs
+through ``model.fit`` — scan-compiled chunks, checkpoint/resume, and (with
+--distributed, under forced host devices or a real fleet) the mesh-sharded
+KrK step.
 """
 
 from __future__ import annotations
@@ -46,22 +47,25 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--distributed", action="store_true",
                     help="shard the batch over all devices ('data' mesh)")
+    ap.add_argument("--max-dense", type=int, default=None,
+                    help="raise the dense-materialization guard (em on a "
+                         "Kron model needs N <= this; default 4096)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
-    from ..core import SubsetBatch, random_krondpp
-    from ..learning import fit, schedules
+    from ..core import SubsetBatch
+    from ..dpp import MAX_DENSE_N, random_kron, schedules
 
-    # ---- ground-truth kernel + device-drawn training subsets ----
+    # ---- ground-truth model + device-drawn training subsets ----
     key = jax.random.PRNGKey(args.seed)
     k_true, k_data = jax.random.split(key)
-    true = random_krondpp(k_true, (args.n1, args.n2))
-    batch = _draw_subsets(true, k_data, args.subsets, args.expected_size)
+    true = random_kron(k_true, (args.n1, args.n2)) \
+        .rescale(args.expected_size)
+    batch = _nonempty(true.sample(k_data, args.subsets))
 
-    init = random_krondpp(jax.random.PRNGKey(args.seed + 1),
-                          (args.n1, args.n2))
-    model = init.full_matrix() if args.algorithm == "em" else init
+    init = random_kron(jax.random.PRNGKey(args.seed + 1),
+                       (args.n1, args.n2))
 
     mesh = None
     if args.distributed:
@@ -72,14 +76,15 @@ def main():
             batch = SubsetBatch(batch.indices[: batch.n - batch.n % len(devs)],
                                 batch.mask[: batch.n - batch.n % len(devs)])
 
-    rep = fit(model, batch, algorithm=args.algorithm, iters=args.iters,
-              a=args.a, schedule=schedules.by_name(args.schedule, args.a),
-              minibatch_size=args.minibatch, seed=args.seed,
-              log_every=args.log_every, ll_mode=args.ll_mode,
-              use_dense_theta=args.dense_theta,
-              fresh_theta=not args.stale_theta,
-              checkpoint_dir=args.checkpoint_dir,
-              save_every=args.save_every, resume=args.resume, mesh=mesh)
+    rep = init.fit(batch, algorithm=args.algorithm, iters=args.iters,
+                   max_dense=args.max_dense or MAX_DENSE_N,
+                   a=args.a, schedule=schedules.by_name(args.schedule, args.a),
+                   minibatch_size=args.minibatch, seed=args.seed,
+                   log_every=args.log_every, ll_mode=args.ll_mode,
+                   use_dense_theta=args.dense_theta,
+                   fresh_theta=not args.stale_theta,
+                   checkpoint_dir=args.checkpoint_dir,
+                   save_every=args.save_every, resume=args.resume, mesh=mesh)
 
     for sweep, ll in zip(rep.ll_sweeps, rep.log_likelihoods):
         print(json.dumps({"sweep": sweep, "ll": round(ll, 4)}))
@@ -92,22 +97,12 @@ def main():
     }))
 
 
-def _draw_subsets(true, key, n_subsets, expected_size):
-    """Dataset in one vmapped device call off the sampling subsystem."""
-    import jax.numpy as jnp
+def _nonempty(batch):
+    """Drop empty subsets (an empty Y contributes a constant to the LL)."""
     import numpy as np
     from ..core import SubsetBatch
-    from ..sampling import (SpectralCache, rescale_expected_size,
-                            sample_krondpp_batched)
-
-    true = rescale_expected_size(true, expected_size)
-    spec = SpectralCache().spectrum(true)
-    picks, counts = sample_krondpp_batched(key, spec,
-                                           spec.suggested_k_max(), n_subsets)
-    mask = picks >= 0
-    # keep only non-empty subsets (empty Y contributes a constant)
-    keep = np.asarray(mask.any(axis=1))
-    return SubsetBatch(jnp.where(mask, picks, 0)[keep], mask[keep])
+    keep = np.asarray(batch.mask.any(axis=1))
+    return SubsetBatch(batch.indices[keep], batch.mask[keep])
 
 
 if __name__ == "__main__":

@@ -1,11 +1,17 @@
 """repro.learning — device-resident KronDPP learning engine (paper Sec. 3).
 
+NOTE: the public API for learning is the ``repro.dpp`` facade —
+``model.fit(batch, algorithm=..., ...)`` on a ``Dense`` or ``Kron`` model
+delegates here and wraps the result back into a model. This package is
+the engine behind it.
+
 The paper's second contribution — batch and stochastic optimization for
 learning KronDPP parameters — compiled the way ``repro.sampling`` compiled
 Sec. 4: whole epochs as ``lax.scan`` over sweeps with donated carries,
 on-device minibatch selection, and LL/metrics surfaced to the host only at
 chunk boundaries. The host drivers in ``repro.core`` (``fit_krk_picard``,
-``fit_em``, ``fit_joint_picard``) remain as thin deprecated delegates.
+``fit_em``, ``fit_joint_picard``) are deprecated shims that warn and
+delegate.
 
 Module map
 ----------

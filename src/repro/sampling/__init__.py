@@ -1,10 +1,13 @@
 """repro.sampling — device-resident batched exact DPP sampling (Sec. 4).
 
-The paper's asymptotic win (O(N^{3/2}) exact sampling for m=2, O(N) for
-m=3) turned into measured throughput: the whole pipeline — spectrum draw,
-lazy Kronecker eigenvector assembly, projection selection — is fixed-shape
-jax, jit-compiled and vmapped over PRNG keys. The host-side numpy sampler
-in ``core.sampling`` remains as the reference oracle.
+NOTE: the public API for sampling is the ``repro.dpp`` facade
+(``Dense(L)`` / ``Kron(factors)`` → ``model.sample`` / ``model.service``).
+This package is the engine behind it: the paper's asymptotic win
+(O(N^{3/2}) exact sampling for m=2, O(N) for m=3) turned into measured
+throughput — spectrum draw, lazy Kronecker eigenvector assembly, and
+projection selection as fixed-shape jax, jit-compiled and vmapped over
+PRNG keys. The host-side numpy sampler in ``core.sampling`` remains as
+the reference oracle.
 
 Module map
 ----------
@@ -21,20 +24,54 @@ kdpp.py      ``sample_kdpp_batched`` / ``sample_kdpp_dense`` — exactly-k
              sampling via the log-space elementary-symmetric-polynomial
              recursion on the factored spectrum.
 service.py   ``SamplingService`` — micro-batching front-end (submit →
-             coalesce → one vmapped device call → scatter) used by the
-             data pipeline and serving layers.
+             coalesce → one vmapped device call → scatter) used via
+             ``model.service()`` by the data pipeline and serving layers.
+
+The bare ``sample_*`` names re-exported here are deprecated shims; new
+code goes through ``repro.dpp`` (or ``repro.dpp.functional`` inside a jit
+trace). Subsystem-internal callers import from the submodules directly.
 """
 
+import functools as _functools
+import warnings as _warnings
+
 from .spectral import (FactorSpectrum, SpectralCache, default_cache,
-                       log_product_spectrum, rescale_expected_size)
-from .batched import (compile_cache_size, picks_to_lists,
-                      sample_krondpp_batched)
-from .kdpp import log_esp_table, sample_kdpp_batched, sample_kdpp_dense
+                       gain_for_expected_size, log_product_spectrum,
+                       rescale_expected_size)
+from .batched import compile_cache_size, picks_to_lists
+from .batched import sample_krondpp_batched as _sample_krondpp_batched
+from .kdpp import log_esp_table
+from .kdpp import (sample_kdpp_batched as _sample_kdpp_batched,
+                   sample_kdpp_dense as _sample_kdpp_dense)
 from .service import SamplingService, SampleTicket
+
+
+def _deprecated_shim(fn, facade_hint):
+    @_functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        _warnings.warn(
+            f"repro.sampling.{fn.__name__} (top-level re-export) is "
+            f"deprecated; use {facade_hint}, or import it from "
+            f"repro.sampling.{fn.__module__.rsplit('.', 1)[-1]} if you "
+            f"really want the raw engine entry point",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+    return wrapper
+
+
+sample_krondpp_batched = _deprecated_shim(
+    _sample_krondpp_batched, "repro.dpp: model.sample(key, n)")
+sample_kdpp_batched = _deprecated_shim(
+    _sample_kdpp_batched, "repro.dpp: model.sample(key, n, k=k)")
+sample_kdpp_dense = _deprecated_shim(
+    _sample_kdpp_dense,
+    "repro.dpp: Dense(L).sample(key, k=k) — or "
+    "repro.dpp.functional.sample_kdpp_dense inside a jit trace")
 
 __all__ = [
     "FactorSpectrum", "SpectralCache", "default_cache",
     "log_product_spectrum", "rescale_expected_size",
+    "gain_for_expected_size",
     "sample_krondpp_batched", "picks_to_lists", "compile_cache_size",
     "log_esp_table", "sample_kdpp_batched", "sample_kdpp_dense",
     "SamplingService", "SampleTicket",

@@ -60,18 +60,27 @@ class ServiceStats:
 
 
 class SamplingService:
-    """Batched exact sampling against one KronDPP kernel.
+    """Batched exact sampling against one DPP kernel.
 
-    The factor spectra come from a ``SpectralCache`` (shared across
-    services by default), so constructing a second service over the same
-    factor arrays does zero eigendecomposition work.
+    Accepts a ``repro.dpp`` facade model (``Dense`` / ``Kron`` — anything
+    with a ``spectrum(cache)`` method) or a legacy ``core.KronDPP``. The
+    factor spectra come from a ``SpectralCache`` (shared across services
+    by default), so constructing a second service over the same factor
+    arrays does zero eigendecomposition work.
     """
 
-    def __init__(self, dpp: KronDPP, k_max: Optional[int] = None,
+    def __init__(self, dpp, k_max: Optional[int] = None,
                  cache: Optional[SpectralCache] = None, seed: int = 0,
                  max_batch: int = 1024):
         self.cache = cache if cache is not None else default_cache()
-        self.spectrum = self.cache.spectrum(dpp)
+        if isinstance(dpp, KronDPP):
+            self.spectrum = self.cache.spectrum(dpp)
+        elif hasattr(dpp, "spectrum"):       # facade DPPModel
+            self.spectrum = dpp.spectrum(self.cache)
+        else:
+            raise TypeError(
+                f"SamplingService wants a repro.dpp model or core.KronDPP, "
+                f"got {type(dpp).__name__}")
         self.k_max = int(k_max) if k_max is not None \
             else self.spectrum.suggested_k_max()
         self.max_batch = int(max_batch)

@@ -103,6 +103,15 @@ class FactorSpectrum:
         return max(1, min(k, self.N))
 
 
+class _CacheStats(dict):
+    """Counter snapshot that is also callable returning itself, so both
+    the original ``cache.stats`` property access and the facade-era
+    ``cache.stats()`` call read the same dict."""
+
+    def __call__(self) -> "_CacheStats":
+        return self
+
+
 class SpectralCache:
     """LRU cache of per-factor eigendecompositions, keyed on array identity.
 
@@ -114,14 +123,22 @@ class SpectralCache:
         self._entries = collections.OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
     @property
-    def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses,
-                "size": len(self._entries)}
+    def stats(self) -> "_CacheStats":
+        """Counters for observability: factor-lookup hits/misses, LRU
+        evictions, and the current entry count. Surfaced in the sampling
+        benchmark JSON so cache behavior shows up in the perf trend.
+
+        Usable as ``cache.stats()`` (the facade-era spelling) and as
+        ``cache.stats["hits"]`` (the PR-1 property contract)."""
+        return _CacheStats(hits=self.hits, misses=self.misses,
+                           evictions=self.evictions,
+                           size=len(self._entries))
 
     def clear(self) -> None:
         self._entries.clear()
@@ -139,6 +156,7 @@ class SpectralCache:
         self._entries[key] = (f, lam, vec)   # strong ref pins the id
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)
+            self.evictions += 1
         return lam, vec
 
     def spectrum(self, dpp: KronDPP) -> FactorSpectrum:
@@ -154,18 +172,14 @@ class SpectralCache:
         return FactorSpectrum((lam,), (vec,))
 
 
-def rescale_expected_size(dpp: KronDPP, target: float,
-                          iters: int = 100) -> KronDPP:
-    """Scalar-rescale the factors so E|Y| = Σ σ(log g + log λ) hits
-    ``target`` — bisection on log g over the log-space product spectrum,
-    so huge kernels never overflow the fold. Raw U[0, sqrt(2)] kernels
-    have E|Y| ~ N, which buries any benchmark comparison under the shared
-    O(N k³) selection cost; callers rescale to a workload-sized E|Y|.
-    """
+def gain_for_expected_size(log_lams: "jax.Array", target: float,
+                           iters: int = 100) -> float:
+    """Scalar gain g such that E|Y| = Σ σ(log g + log λ) hits ``target`` —
+    bisection on log g over the log-space product spectrum, so huge kernels
+    never overflow the fold. Shared by ``rescale_expected_size`` and the
+    ``repro.dpp`` facade's ``Model.rescale``."""
     import numpy as np
-    lams = tuple(jnp.maximum(jnp.linalg.eigvalsh(f), 0.0)
-                 for f in dpp.factors)
-    ll = np.asarray(log_product_spectrum(lams), np.float64)
+    ll = np.asarray(log_lams, np.float64)
     lo, hi = -60.0, 60.0                      # g in [~1e-26, ~1e26]
     for _ in range(iters):
         mid = 0.5 * (lo + hi)
@@ -174,7 +188,19 @@ def rescale_expected_size(dpp: KronDPP, target: float,
             hi = mid
         else:
             lo = mid
-    g = float(np.exp(0.5 * (lo + hi)))
+    return float(np.exp(0.5 * (lo + hi)))
+
+
+def rescale_expected_size(dpp: KronDPP, target: float,
+                          iters: int = 100) -> KronDPP:
+    """Scalar-rescale the factors so E|Y| hits ``target``. Raw
+    U[0, sqrt(2)] kernels have E|Y| ~ N, which buries any benchmark
+    comparison under the shared O(N k³) selection cost; callers rescale to
+    a workload-sized E|Y|.
+    """
+    lams = tuple(jnp.maximum(jnp.linalg.eigvalsh(f), 0.0)
+                 for f in dpp.factors)
+    g = gain_for_expected_size(log_product_spectrum(lams), target, iters)
     return KronDPP(tuple(f * (g ** (1.0 / dpp.m)) for f in dpp.factors))
 
 

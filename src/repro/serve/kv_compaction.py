@@ -5,12 +5,14 @@ When a full-attention KV cache exceeds its budget, keep the most *diverse*
 key subset (plus a recency window): build an L-kernel over key vectors and
 either take the greedy k-DPP MAP (Chen et al. 2018 fast greedy, the
 `greedy_map` Pallas kernel's op, ``method="map"``) or draw an *exact*
-k-DPP sample (``method="sample"`` — the batched phase-1/2 machinery from
-``repro.sampling``, which de-biases eviction across heads at the same
-O(S k) per-step cost after the in-trace eigh). Diversity-preserving
+k-DPP sample (``method="sample"`` — the batched phase-1/2 machinery behind
+the ``repro.dpp`` facade, which de-biases eviction across heads at the
+same O(S k) per-step cost after the in-trace eigh). Diversity-preserving
 eviction retains long-range anchors that recency-only (SWA) eviction drops.
 
-jit-able with static budget; runs per (layer, batch, kv-head) via vmap.
+jit-able with static budget; runs per (layer, batch, kv-head) via vmap —
+which is why this consumes the trace-safe ``repro.dpp.functional``
+building blocks rather than the host-level facade models.
 """
 
 from __future__ import annotations
@@ -20,9 +22,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.sampling import greedy_map_kdpp
+from ..dpp.functional import greedy_map_kdpp, sample_kdpp_dense
 from ..models.attention import KVCache
-from ..sampling.kdpp import sample_kdpp_dense
 
 
 def dpp_select_tokens(keys: jax.Array, budget: int, recency: int = 0,

@@ -8,6 +8,10 @@ import pytest
 
 from repro.core import (KronDPP, SubsetBatch, fit_em, fit_joint_picard,
                         fit_krk_picard, fit_picard, random_krondpp)
+
+# this module deliberately exercises the deprecated core fit_* shims (the
+# facade equivalents are covered in test_dpp_facade.py)
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 from repro.core import kron as K
 from repro.core.dpp import picard_delta
 from repro.core.krk_picard import (AC_from_dense_theta, accumulate_AC,

@@ -18,8 +18,11 @@ from repro.core import KronDPP, random_krondpp, sample_krondpp_batch
 from repro.core.dpp import marginal_kernel
 from repro.sampling import (SamplingService, SpectralCache,
                             compile_cache_size, log_esp_table,
-                            picks_to_lists, sample_kdpp_batched,
-                            sample_kdpp_dense, sample_krondpp_batched)
+                            picks_to_lists)
+# engine entry points, imported from the submodules (the top-level
+# re-exports are deprecated shims onto the repro.dpp facade)
+from repro.sampling.batched import sample_krondpp_batched
+from repro.sampling.kdpp import sample_kdpp_batched, sample_kdpp_dense
 
 
 def _membership(picks, N):
@@ -168,16 +171,19 @@ def test_spectral_cache_hit_miss_and_eviction():
     m1 = random_krondpp(jax.random.PRNGKey(0), (3, 4))
     m2 = random_krondpp(jax.random.PRNGKey(1), (3, 4))
     cache.spectrum(m1)
-    assert cache.stats == {"hits": 0, "misses": 2, "size": 2}
+    assert cache.stats() == {"hits": 0, "misses": 2, "evictions": 0,
+                             "size": 2}
+    assert cache.stats["misses"] == 2     # PR-1 property spelling still works
     cache.spectrum(m1)
-    assert cache.stats["hits"] == 2 and cache.stats["misses"] == 2
+    assert cache.stats()["hits"] == 2 and cache.stats()["misses"] == 2
     cache.spectrum(m2)                       # 2 more misses, evicts one of m1
-    assert cache.stats["misses"] == 4 and len(cache) == 3
+    assert cache.stats()["misses"] == 4 and len(cache) == 3
+    assert cache.stats()["evictions"] == 1   # the LRU entry fell out
     # shared factor objects across models hit (m1.factors[1] survived the
     # eviction, m2's factors are fresh)
     m3 = KronDPP((m2.factors[0], m1.factors[1]))
     cache.spectrum(m3)
-    assert cache.stats["hits"] == 4 and cache.stats["misses"] == 4
+    assert cache.stats()["hits"] == 4 and cache.stats()["misses"] == 4
 
 
 def test_one_compile_per_shape():
@@ -209,7 +215,7 @@ def test_service_coalesces_and_scatters():
     assert u1.result() == t1.result() and u2.result() == r2 \
         and u3.result() == t3.result()
     # second service against the same factors does no new eigh work
-    assert cache.stats["misses"] == 2
+    assert cache.stats()["misses"] == 2
 
 
 def test_service_round_up_shapes_with_non_pow2_max_batch():
@@ -263,7 +269,8 @@ def test_service_kdpp_exact_k():
 
 def test_core_delegate_matches_subsystem_shapes():
     m = random_krondpp(jax.random.PRNGKey(0), (2, 3))
-    rows = sample_krondpp_batch(jax.random.PRNGKey(0), m, 6)
+    with pytest.warns(DeprecationWarning):
+        rows = sample_krondpp_batch(jax.random.PRNGKey(0), m, 6)
     assert len(rows) == 6
     for r in rows:
         assert all(0 <= i < 6 for i in r) and len(set(r)) == len(r)
