@@ -10,14 +10,16 @@ import traceback
 def main() -> None:
     from . import (facade_api, kernel_bench, paper_fig1_engine,
                    paper_fig1_synthetic, paper_fig1c_stochastic,
-                   paper_sec4_batched_sampling, paper_sec4_sampling,
-                   paper_table1_quality, paper_table2_runtime, roofline)
+                   paper_sec4_batched_sampling, paper_sec4_phase2_fused,
+                   paper_sec4_sampling, paper_table1_quality,
+                   paper_table2_runtime, roofline)
 
     print("name,us_per_call,derived")
     for mod in (paper_fig1_synthetic, paper_fig1c_stochastic,
                 paper_fig1_engine,
                 paper_table1_quality, paper_table2_runtime,
                 paper_sec4_sampling, paper_sec4_batched_sampling,
+                paper_sec4_phase2_fused,
                 facade_api,
                 kernel_bench, roofline):
         try:

@@ -29,9 +29,14 @@ class SubsetBatch:
 
     indices: (n, k_max) int32 — ground-set indices, arbitrary in padded slots.
     mask:    (n, k_max) bool  — True for real items.
+    truncated: optional (n,) bool provenance from the device samplers —
+        True for rows whose draw overflowed the sampler's static k_max
+        budget and was clipped (``compact_selection``). None for batches
+        that cannot truncate (observed data, host draws, exact-k draws).
     """
     indices: jax.Array
     mask: jax.Array
+    truncated: "jax.Array | None" = None
 
     @property
     def n(self) -> int:
@@ -43,6 +48,11 @@ class SubsetBatch:
 
     def sizes(self) -> jax.Array:
         return self.mask.sum(-1)
+
+    def truncation_count(self) -> int:
+        """Rows clipped at the sampler's k_max budget (0 when provenance
+        is absent)."""
+        return 0 if self.truncated is None else int(self.truncated.sum())
 
     @staticmethod
     def from_lists(subsets: Sequence[Sequence[int]], k_max: int | None = None
@@ -63,7 +73,7 @@ class SubsetBatch:
         return [list(idx[i][msk[i]]) for i in range(self.n)]
 
     def tree_flatten(self):
-        return (self.indices, self.mask), None
+        return (self.indices, self.mask, self.truncated), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):

@@ -129,7 +129,7 @@ def sample_krondpp_batch(key: jax.Array, dpp: KronDPP, num_samples: int,
     from ..sampling.batched import picks_to_lists, sample_krondpp_batched
     from ..sampling.spectral import default_cache
     spec = default_cache().spectrum(dpp)
-    picks, _ = sample_krondpp_batched(key, spec, k_max, num_samples)
+    picks, _, _ = sample_krondpp_batched(key, spec, k_max, num_samples)
     return picks_to_lists(picks)
 
 

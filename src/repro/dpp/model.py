@@ -60,10 +60,13 @@ def _as_index_set(idx, n: int) -> jnp.ndarray:
     return jnp.asarray(np.unique(arr), jnp.int32)
 
 
-def _picks_to_subsets(picks: jax.Array) -> SubsetBatch:
-    """(B, k_max) -1-padded device picks -> a padded SubsetBatch."""
+def _picks_to_subsets(picks: jax.Array,
+                      truncated: Optional[jax.Array] = None) -> SubsetBatch:
+    """(B, k_max) -1-padded device picks -> a padded SubsetBatch, carrying
+    the sampler's per-row truncation provenance when available."""
     mask = picks >= 0
-    return SubsetBatch(jnp.where(mask, picks, 0).astype(jnp.int32), mask)
+    return SubsetBatch(jnp.where(mask, picks, 0).astype(jnp.int32), mask,
+                       truncated)
 
 
 class DPPModel:
@@ -120,7 +123,12 @@ class DPPModel:
     def rescale(self, expected_size: float,
                 cache: Optional[SpectralCache] = None) -> "DPPModel":
         """Scalar-rescale the kernel so E|Y| hits ``expected_size``
-        (log-space bisection; overflow-safe for huge products)."""
+        (log-space bisection; overflow-safe for huge products).
+
+        Raises ``ValueError`` when ``expected_size`` is outside the
+        achievable open range (0, rank): no scalar gain can push
+        E|Y| = Σ λ/(1+λ) to 0, or past the number of nonzero
+        eigenvalues."""
         spec = self.spectrum(cache)
         g = gain_for_expected_size(spec.log_eigenvalues(), expected_size)
         gm = g ** (1.0 / self.m)
@@ -158,12 +166,14 @@ class DPPModel:
                              f"got {backend!r}")
         spec = self.spectrum(cache)
         if k is not None:
-            picks = sample_kdpp_batched(key, spec, int(k), n)
-        else:
-            if k_max is None:
-                k_max = spec.suggested_k_max()
-            picks, _ = sample_krondpp_batched(key, spec, int(k_max), n)
-        return _picks_to_subsets(picks)
+            # exact-k draws cannot overflow their k-slot budget
+            return _picks_to_subsets(sample_kdpp_batched(key, spec,
+                                                         int(k), n))
+        if k_max is None:
+            k_max = spec.suggested_k_max()
+        picks, _, truncated = sample_krondpp_batched(key, spec,
+                                                     int(k_max), n)
+        return _picks_to_subsets(picks, truncated)
 
     def _sample_host(self, key: jax.Array, n: int) -> SubsetBatch:
         from ..core.sampling import sample_full_dpp, sample_krondpp

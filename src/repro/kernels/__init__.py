@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the repo's compute hot spots, with jnp oracles.
+
+kron_matvec.py     batched (A ⊗ B) x via the vec-trick (two MXU matmuls)
+partial_trace.py   Appendix-B contractions A = Tr(Θ_(kl) L2), C (KrK batch)
+greedy_map.py      fast greedy k-DPP MAP update step (serving compaction)
+phase2_select.py   fused phase-2 projection-DPP selection: the whole
+                   per-step chain (inverse-CDF search, row gather, CGS2,
+                   colspace matvec, norms downdate) in one pallas_call
+                   with basis + residual norms resident in VMEM
+
+``ops.py`` holds the public dispatchers: TPU runs the compiled kernels,
+other backends fall back to the jnp reference (or interpret mode when
+forced — the CI ``pallas`` job exercises every kernel that way on CPU).
+``ref.py`` holds the pure-jnp oracles the kernels are tested against.
+"""

@@ -17,6 +17,7 @@ from . import ref
 from .kron_matvec import kron_matvec_pallas
 from .partial_trace import partial_trace_A_pallas, partial_trace_C_pallas
 from .greedy_map import greedy_map_update_pallas
+from .phase2_select import canonical_pair, phase2_select_pallas
 
 _VMEM_BUDGET = 12 * 2 ** 20  # bytes we allow a single kernel tile set to claim
 
@@ -75,6 +76,80 @@ def kron_eigvec_batch(P1: jax.Array, P2: jax.Array, i: jax.Array,
         return kron_matvec(P1, P2, E, force_pallas=force_pallas).T
     return (P1[:, i][:, None, :] * P2[:, j][None, :, :]).reshape(
         N1 * N2, i.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# phase-2 projection-DPP selection (sampling hot path)
+# ---------------------------------------------------------------------------
+
+def _phase2_block_n1(N1: int, Nr: int, k: int) -> int:
+    """Largest G1 tile that keeps the kernel's resident set (norms + Gr +
+    basis + one G1 tile) inside the VMEM budget, or 0 when the fixed
+    resident set alone cannot fit (callers fall back to the reference)."""
+    fixed = (N1 * Nr + Nr * k + 2 * k * k + k) * 4
+    if fixed + k * 4 > _VMEM_BUDGET:
+        return 0
+    bn1 = N1
+    while bn1 > 1 and fixed + bn1 * k * 4 > _VMEM_BUDGET:
+        bn1 = (bn1 + 1) // 2
+    return bn1
+
+
+def phase2_select(us, Gs, sizes, k_eff, backend=None, block_n1=0):
+    """Projection-DPP phase-2 selection — the ops-level dispatch point.
+
+    us:    (k_max,) or (B, k_max) per-step uniforms.
+    Gs:    factored eigenvector columns, each (N_f, k_max) or
+           (B, N_f, k_max) (``gather_factor_columns``).
+    k_eff: () or (B,) int32 live step counts.
+    Returns picks of shape us.shape, int32, -1 in padded/dead slots.
+
+    backend: None — auto (fused Pallas kernel on TPU, jax while_loop
+        reference elsewhere); "reference" — force the while_loop;
+        "pallas" — force the fused kernel (interpret mode off-TPU, the
+        honest CPU test/benchmark path).
+    Both backends run bit-identical arithmetic on the canonicalized
+    (G1, Gr) factor pair, so picks agree draw-for-draw on shared uniforms
+    (property-tested in tests/test_phase2_fused.py).
+    """
+    got = tuple(int(G.shape[-2]) for G in Gs)
+    if got != tuple(int(s) for s in sizes):
+        raise ValueError(f"sizes {tuple(sizes)} inconsistent with the "
+                         f"factor-column row counts {got}")
+    Nr = 1
+    for G in Gs[1:]:
+        Nr *= int(G.shape[-2])
+    auto_bn1 = block_n1 if block_n1 > 0 else _phase2_block_n1(
+        int(Gs[0].shape[-2]), Nr, int(us.shape[-1]))
+    if backend is None:
+        # auto never launches a kernel whose fixed resident set (norms +
+        # Gr fold + basis) cannot fit VMEM — the while_loop keeps working
+        backend = "pallas" if _on_tpu() and auto_bn1 > 0 else "reference"
+    k_eff = jnp.asarray(k_eff, jnp.int32)
+    batched = us.ndim == 2
+    if backend == "reference":
+        from ..sampling.batched import phase2_select_reference
+        if not batched:
+            return phase2_select_reference(us, Gs, sizes, k_eff)
+        return jax.vmap(
+            lambda u, G, ke: phase2_select_reference(u, G, sizes, ke)
+        )(us, tuple(Gs), k_eff)
+    if backend != "pallas":
+        raise ValueError(f"phase2_select backend must be None, 'reference' "
+                         f"or 'pallas', got {backend!r}")
+    if auto_bn1 <= 0:
+        raise ValueError(
+            f"phase2_select fused kernel needs its resident set (norms "
+            f"N1*Nr={Gs[0].shape[-2]}*{Nr}, Gr fold, basis) inside the "
+            f"{_VMEM_BUDGET >> 20}MiB VMEM budget; use "
+            f"backend='reference' for this shape")
+    if not batched:
+        Gs = tuple(G[None] for G in Gs)
+        us, k_eff = us[None], k_eff[None]
+    G1, Gr = canonical_pair(Gs)
+    picks = phase2_select_pallas(us, k_eff, G1, Gr, block_n1=auto_bn1,
+                                 interpret=not _on_tpu())
+    return picks if batched else picks[0]
 
 
 # ---------------------------------------------------------------------------

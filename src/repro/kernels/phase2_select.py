@@ -1,0 +1,217 @@
+"""Pallas kernel: fused phase-2 projection-DPP selection (paper Alg. 2).
+
+The reference implementation (``sampling.batched.phase2_select_reference``)
+runs the Gram-Schmidt chain rule as a ``lax.while_loop`` of O(k_eff) small
+ops — cumsum -> inverse-CDF search -> factored row gather -> CGS2 -> one
+O(N) colspace matvec -> norms downdate — re-reading the factored columns
+and the residual-norms vector from HBM every step. This kernel fuses the
+whole loop into one ``pallas_call``:
+
+grid        (batch, k_max, 2, n_tiles) — sequential on TPU, so VMEM/SMEM
+            scratch carries state across steps. Dims: sample b, selection
+            step t, phase p (0 = norms init/downdate, 1 = select), and the
+            N1-tile j streaming the leading-factor block.
+resident    the (k_max, k_max) Gram-Schmidt basis B, the (N1, Nr) residual
+            norms, the gathered row w, and the {alive, pick} scalars live
+            in scratch for all k_eff steps — only the G1 tiles stream.
+factors     canonicalized to exactly two: the leading block G1 (N1, k) and
+            the elementwise-product fold Gr (Nr, k) of every trailing
+            factor (``canonical_pair``); m = 1 gets a ones() second factor.
+            One kernel therefore serves the DPP, k-DPP and dense paths.
+
+Phase 0 initializes norms[n] = sum_c prod_f G_f[n_f, c]^2 (t = 0) or
+applies the downdate norms -= (V q_{t-1})^2 tile-by-tile off B's column
+t-1. Phase 1 draws the inverse-CDF index off the full resident norms
+cumsum (identical arithmetic to the reference — the property tests assert
+draw-for-draw equality), gathers the factored row from the owning tile,
+runs CGS2 in the k-dimensional coefficient space, and writes the pick.
+
+Degenerate spectra: when the total residual mass collapses below
+``MASS_EPS`` (numerically rank-deficient factors exhaust the column span
+early), the step marks the sample dead instead of re-picking the clamped
+index N-1 — remaining slots stay -1, mirroring the reference's early
+exit. This is the duplicate-items bugfix shared by both backends.
+
+``interpret=True`` runs the same kernel as XLA on CPU/GPU (tests, and the
+honest CPU benchmark); the compiled path targets TPU where the ops.py
+wrapper picks MXU-aligned tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: A normalized q-column with squared norm below this is treated as zero
+#: (the item was already in the selected span) — matches the reference.
+EPS = 1e-30
+
+#: Total residual mass at or below this means the remaining columns span
+#: nothing selectable: stop instead of clamp-picking N-1 forever. Healthy
+#: steps have mass k_eff - t >= 1, so 1e-6 is many orders conservative.
+MASS_EPS = 1e-6
+
+
+def fold_trailing(Gs: Tuple[jax.Array, ...]) -> Tuple[jax.Array, ...]:
+    """(G_1, ..., G_m) -> (G_1, G_r): elementwise-product fold of the
+    trailing factors, row-major — Gr[(n_2..n_m), c] = prod_{f>1} G_f[n_f, c].
+    Works on unbatched (N_f, k) and batched (B, N_f, k) stacks alike."""
+    if len(Gs) <= 2:
+        return tuple(Gs)
+    Gr = Gs[1]
+    for G in Gs[2:]:
+        k = Gr.shape[-1]
+        Gr = (Gr[..., :, None, :] * G[..., None, :, :]).reshape(
+            Gr.shape[:-2] + (Gr.shape[-2] * G.shape[-2], k))
+    return (Gs[0], Gr)
+
+
+def canonical_pair(Gs: Tuple[jax.Array, ...]) -> Tuple[jax.Array, jax.Array]:
+    """Exactly two factors: fold the trailing ones, synthesize a ones()
+    second factor for m = 1. Shared by the kernel wrapper AND the jax
+    reference so both run bit-identical arithmetic (draw-for-draw picks)."""
+    Gs = fold_trailing(Gs)
+    if len(Gs) == 2:
+        return Gs[0], Gs[1]
+    G1 = Gs[0]
+    ones = jnp.ones(G1.shape[:-2] + (1, G1.shape[-1]), G1.dtype)
+    return G1, ones
+
+
+def _phase2_kernel(us_ref, keff_ref, g1_ref, gr_ref, picks_ref,
+                   norms_ref, b_ref, w_ref, flag_ref,
+                   *, k_max: int, bn1: int, n_tiles: int, Nr: int, N: int,
+                   merged: bool):
+    t = pl.program_id(1)
+    p = pl.program_id(2)
+    j = pl.program_id(3)
+    # single-tile layout: the downdate/select ordering that the two-phase
+    # grid enforces across tiles is trivially sequential inside one body,
+    # so both phases run in the same grid step (half the dispatches —
+    # the batch-1 latency case)
+    in_update = p == 0
+    in_select = in_update if merged else (p == 1)
+
+    @pl.when((t == 0) & (p == 0) & (j == 0))
+    def _init():
+        picks_ref[...] = jnp.full((1, k_max), -1, jnp.int32)
+        b_ref[...] = jnp.zeros((k_max, k_max), jnp.float32)
+        flag_ref[0] = 1          # alive: residual mass not yet collapsed
+        flag_ref[1] = 0          # pick of the current/last live step
+
+    keff = keff_ref[0, 0]
+    g1 = g1_ref[0]               # (bn1, k) streamed tile
+    gr = gr_ref[0]               # (Nr, k) resident fold
+    alive = flag_ref[0] == 1
+    live = (t < keff) & alive
+
+    # -- phase 0: norms init (t == 0) / downdate off B[:, t-1] (t > 0) ----
+    @pl.when(in_update & (t == 0))
+    def _norms0():
+        norms_ref[pl.ds(j * bn1, bn1), :] = (g1 * g1) @ (gr * gr).T
+
+    @pl.when(in_update & (t > 0) & live)
+    def _downdate():
+        q = b_ref[:, pl.ds(t - 1, 1)]            # (k, 1)
+        a = g1 * q.reshape(1, -1)
+        ct = a @ gr.T                            # (bn1, Nr)
+        tile = norms_ref[pl.ds(j * bn1, bn1), :]
+        norms_ref[pl.ds(j * bn1, bn1), :] = jnp.maximum(tile - ct * ct, 0.0)
+        i_prev = flag_ref[1]
+        i1 = i_prev // Nr
+        ir = i_prev - i1 * Nr
+
+        @pl.when((i1 >= j * bn1) & (i1 < (j + 1) * bn1))
+        def _zero_pick():                        # .at[i].set(0.0)
+            norms_ref[pl.ds(i1, 1), pl.ds(ir, 1)] = jnp.zeros((1, 1),
+                                                              jnp.float32)
+
+    # -- phase 1: inverse-CDF select + CGS2 + pick ------------------------
+    @pl.when(in_select & (j == 0) & live)
+    def _select():
+        csum = jnp.cumsum(norms_ref[...].reshape(-1))
+        total = csum[-1]
+        # searchsorted(csum, r, side="right") == #(csum <= r) on the
+        # non-decreasing cumsum — identical index, vectorized form
+        r = us_ref[0, t] * total
+        i = jnp.sum((csum <= r).astype(jnp.int32))
+        flag_ref[1] = jnp.minimum(i, N - 1)
+        flag_ref[0] = jnp.where(total > MASS_EPS, 1, 0)
+
+    # re-read: a collapsed step must not pick (sequential ref semantics)
+    alive_now = flag_ref[0] == 1
+    live_now = (t < keff) & alive_now
+    i = flag_ref[1]
+    i1 = i // Nr
+    ir = i - i1 * Nr
+
+    @pl.when(in_select & live_now & (i1 >= j * bn1) & (i1 < (j + 1) * bn1))
+    def _gather_row():
+        w_ref[...] = g1_ref[0, pl.ds(i1 - j * bn1, 1), :] * \
+            gr_ref[0, pl.ds(ir, 1), :]
+
+    @pl.when(in_select & (j == n_tiles - 1) & live_now)
+    def _orthogonalize():
+        w = w_ref[0, :]
+        B = b_ref[...]
+        q = w - B @ (B.T @ w)
+        q = q - B @ (B.T @ q)                    # CGS2: second pass
+        qn2 = jnp.sum(q * q)
+        q = jnp.where(qn2 > EPS,
+                      q / jnp.sqrt(jnp.maximum(qn2, EPS)), 0.0)
+        b_ref[:, pl.ds(t, 1)] = q.reshape(-1, 1)
+        picks_ref[0, t] = i
+
+
+@functools.partial(jax.jit, static_argnames=("block_n1", "interpret"))
+def phase2_select_pallas(us: jax.Array, k_eff: jax.Array,
+                         G1: jax.Array, Gr: jax.Array,
+                         block_n1: int = 0, interpret: bool = False
+                         ) -> jax.Array:
+    """Fused batched phase-2 selection off a canonical factor pair.
+
+    us:    (B, k_max) per-step uniforms.
+    k_eff: (B,) int32 — live step count per sample (<= k_max).
+    G1:    (B, N1, k_max) leading factor columns.
+    Gr:    (B, Nr, k_max) trailing-factor fold (``canonical_pair``).
+    block_n1: G1 rows streamed per tile (0 = whole factor, one tile).
+    Returns (B, k_max) int32 picks, -1 in padded/dead slots.
+    """
+    B, k_max = us.shape
+    N1, Nr = G1.shape[1], Gr.shape[1]
+    N = N1 * Nr
+    bn1 = N1 if block_n1 <= 0 else min(block_n1, N1)
+    n_tiles = -(-N1 // bn1)
+    N1p = n_tiles * bn1
+    if N1p != N1:           # zero rows: zero mass, never selected
+        G1 = jnp.pad(G1, ((0, 0), (0, N1p - N1), (0, 0)))
+    merged = n_tiles == 1   # single tile: both phases in one grid step
+    kern = functools.partial(_phase2_kernel, k_max=k_max, bn1=bn1,
+                             n_tiles=n_tiles, Nr=Nr, N=N, merged=merged)
+    return pl.pallas_call(
+        kern,
+        grid=(B, k_max, 1 if merged else 2, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, k_max), lambda b, t, p, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, t, p, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bn1, k_max), lambda b, t, p, j: (b, j, 0)),
+            pl.BlockSpec((1, Nr, k_max), lambda b, t, p, j: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k_max), lambda b, t, p, j: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, k_max), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((N1p, Nr), jnp.float32),      # residual norms
+            pltpu.VMEM((k_max, k_max), jnp.float32),  # Gram-Schmidt basis
+            pltpu.VMEM((1, k_max), jnp.float32),      # gathered row w
+            pltpu.SMEM((2,), jnp.int32),              # alive, pick
+        ],
+        interpret=interpret,
+    )(us.astype(jnp.float32), k_eff.reshape(B, 1).astype(jnp.int32),
+      G1.astype(jnp.float32), Gr.astype(jnp.float32))

@@ -2,22 +2,25 @@
 
 The host sampler in ``core.sampling`` draws one subset at a time with numpy
 control flow. Here the whole pipeline is fixed-shape jax, jit-compiled once
-per (k_max, batch) shape and ``vmap``-ped over a batch of PRNG keys:
+per (k_max, batch) shape:
 
 phase 1  Bernoulli draw over the product spectrum, computed factor-wise as
          an O(N) log-eigenvalue vector (N eigenvectors are never
          materialized). The random |J| selected eigen-indices are compacted
          into a static (k_max,) slot array with a validity mask (one
-         cumsum + k_max binary searches).
+         cumsum + k_max binary searches); draws whose |J| exceeds the
+         static budget carry a truncation flag. ``vmap``-ped over the
+         batch of PRNG keys.
 phase 2  Lazy Kronecker eigenvectors kept in *factored* form — the m
          gathered factor-column blocks, O(sum N_i k) bytes — then the
-         projection-DPP selection loop as a masked ``lax.scan``: the
-         Gram-Schmidt chain rule on K = V V^T (cf. DPPy's
-         ``proj_dpp_sampler_eig``; Gautier et al. 2018) run in the
-         k-dimensional coefficient space, so each step needs no QR and
-         only one O(N)-output product off the factors. The loop is a
-         ``lax.while_loop`` bounded by the data-dependent |J| (static
-         k_max output shape, -1-padded); categorical draws are
+         projection-DPP selection loop: the Gram-Schmidt chain rule on
+         K = V V^T (cf. DPPy's ``proj_dpp_sampler_eig``; Gautier et al.
+         2018) run in the k-dimensional coefficient space, so each step
+         needs no QR and only one O(N)-output product off the factors.
+         The whole batch goes through ``kernels.ops.phase2_select`` in ONE
+         call: the fused Pallas kernel on TPU (state resident in VMEM
+         across steps), or the ``lax.while_loop`` reference here
+         (``phase2_select_reference``) elsewhere. Categorical draws are
          inverse-CDF on one uniform per step.
 
 Everything is pure jax (no host callbacks), so the sampler runs where the
@@ -33,10 +36,12 @@ import jax
 import jax.numpy as jnp
 
 from ..core.kron import split_indices_multi
+from ..kernels import ops as kernel_ops
 from ..kernels.ops import kron_eigvec_batch
+from ..kernels.phase2_select import EPS as _EPS
+from ..kernels.phase2_select import MASS_EPS as _MASS_EPS
+from ..kernels.phase2_select import canonical_pair
 from .spectral import FactorSpectrum, log_product_spectrum
-
-_EPS = 1e-30
 
 
 # ---------------------------------------------------------------------------
@@ -44,20 +49,23 @@ _EPS = 1e-30
 # ---------------------------------------------------------------------------
 
 def compact_selection(mask: jax.Array, k_max: int
-                      ) -> Tuple[jax.Array, jax.Array]:
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Indices of up to k_max True entries of mask, left-packed.
 
-    Returns (sel (k_max,) int32, valid (k_max,) bool). One O(N) cumsum +
-    k_max binary searches (an argsort or scatter would cost far more on
-    every backend); if more than k_max entries are set, the lowest indices
-    win (callers size k_max so overflow is a many-sigma event).
+    Returns (sel (k_max,) int32, valid (k_max,) bool, truncated () bool).
+    One O(N) cumsum + k_max binary searches (an argsort or scatter would
+    cost far more on every backend); if more than k_max entries are set,
+    the lowest indices win and ``truncated`` is True so callers can count
+    clipped draws instead of silently serving them (callers size k_max so
+    overflow is a many-sigma event — but it must be observable).
     """
     N = mask.shape[0]
     cs = jnp.cumsum(mask.astype(jnp.int32))
     ranks = jnp.arange(1, k_max + 1, dtype=jnp.int32)
     sel = jnp.searchsorted(cs, ranks, side="left")   # idx of c-th True
     valid = ranks <= cs[-1]
-    return jnp.minimum(sel, N - 1).astype(jnp.int32), valid
+    truncated = cs[-1] > k_max
+    return jnp.minimum(sel, N - 1).astype(jnp.int32), valid, truncated
 
 
 def split_mixed_radix(sel: jax.Array, sizes: Tuple[int, ...]
@@ -131,11 +139,20 @@ def _row_product(Gs: Tuple[jax.Array, ...], sizes: Tuple[int, ...],
     return w
 
 
-def phase2_select(key: jax.Array, Gs: Tuple[jax.Array, ...],
-                  sizes: Tuple[int, ...], k_eff: jax.Array) -> jax.Array:
+def phase2_select_reference(us: jax.Array, Gs: Tuple[jax.Array, ...],
+                            sizes: Tuple[int, ...], k_eff: jax.Array
+                            ) -> jax.Array:
     """Projection-DPP selection from k_eff orthonormal Kronecker columns,
-    given in factored form (``gather_factor_columns``). Returns (k_max,)
-    int32 picks, -1 in padded slots.
+    given in factored form (``gather_factor_columns``) with one uniform
+    per step in ``us``. Returns (k_max,) int32 picks, -1 in padded slots.
+
+    This is the jax reference (and the CPU/GPU production path) that the
+    fused Pallas kernel must match draw-for-draw; both canonicalize the
+    factors to the (G1, Gr) pair so the arithmetic is bit-identical. For
+    m >= 3 that folds the trailing factors into one (N/N_1, k) block ONCE
+    per sample — the same O(N/N_1 · k) bytes the old per-step
+    ``_colspace_matvec`` intermediate materialized on every step, paid a
+    single time instead.
 
     Chain rule on the marginal kernel K = V V^T, run in the k-dimensional
     coefficient space: selecting item i conditions the remaining process
@@ -143,59 +160,79 @@ def phase2_select(key: jax.Array, Gs: Tuple[jax.Array, ...],
     an orthonormal basis B (k_max x k_max, tiny) and downdate the
     per-item residual variances norms -= (V q_t)^2. V is never built —
     rows and the one matvec per step come off the factored columns
-    (``_row_product`` / ``_colspace_matvec``), so each step reads a few
-    KB of factors and writes one O(N) vector instead of streaming an
-    (N, k) matrix twice like the classic Cholesky form. Categorical draws
-    are inverse-CDF on the norms cumsum (one uniform per step); selected
-    items get exactly zero mass so no chosen-mask is needed.
+    (``_row_product`` / ``_colspace_matvec``). Categorical draws are
+    inverse-CDF on the norms cumsum; selected items get exactly zero mass
+    so no chosen-mask is needed.
+
+    Degenerate spectra: numerically rank-deficient factors can exhaust
+    the selectable mass while t < k_eff (``csum[-1] <= MASS_EPS``); the
+    loop then exits early with the remaining slots at -1 — the old
+    behavior re-picked the clamped index N-1 every remaining step,
+    emitting duplicate items.
 
     The loop is a ``while_loop`` bounded by the *data-dependent* k_eff
     (<= the static k_max): a typical draw has |J| well under the k_max
     tail bound, so under vmap the batch pays for its slowest lane rather
     than everyone running k_max masked steps.
     """
+    Gs = canonical_pair(Gs)
+    fsizes = tuple(int(G.shape[0]) for G in Gs)
     k_max = Gs[0].shape[1]
-    N = 1
-    for s in sizes:
-        N *= s
+    N = fsizes[0] * fsizes[1]
     norms0 = _colspace_matvec(tuple(G * G for G in Gs),
                               jnp.ones((k_max,), Gs[0].dtype))
-    us = jax.random.uniform(key, (k_max,))
     B0 = jnp.zeros((k_max, k_max), Gs[0].dtype)
     picks0 = jnp.full((k_max,), -1, jnp.int32)
 
     def cond(state):
-        return state[0] < k_eff
+        t, alive = state[0], state[1]
+        return (t < k_eff) & alive
 
     def body(state):
-        t, B, norms, picks = state
+        t, _, B, norms, picks = state
         csum = jnp.cumsum(norms)
+        alive = csum[-1] > _MASS_EPS
         i = jnp.searchsorted(csum, us[t] * csum[-1], side="right")
         i = jnp.minimum(i, N - 1).astype(jnp.int32)
-        w = _row_product(Gs, sizes, i)
+        w = _row_product(Gs, fsizes, i)
         q = w - B @ (B.T @ w)
         q = q - B @ (B.T @ q)          # CGS2: second pass kills drift
         qn2 = jnp.sum(q * q)           # == norms[i] up to roundoff
         q = jnp.where(qn2 > _EPS,
                       q / jnp.sqrt(jnp.maximum(qn2, _EPS)), 0.0)
         ct = _colspace_matvec(Gs, q)
-        norms = jnp.maximum(norms - ct * ct, 0.0).at[i].set(0.0)
-        B = B.at[:, t].set(q)
-        picks = picks.at[t].set(i)
-        return t + 1, B, norms, picks
+        norms_new = jnp.maximum(norms - ct * ct, 0.0).at[i].set(0.0)
+        norms = jnp.where(alive, norms_new, norms)
+        B = jnp.where(alive, B.at[:, t].set(q), B)
+        picks = jnp.where(alive, picks.at[t].set(i), picks)
+        return t + 1, alive, B, norms, picks
 
-    _, _, _, picks = jax.lax.while_loop(
-        cond, body, (jnp.asarray(0, jnp.int32), B0, norms0, picks0))
+    _, _, _, _, picks = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0, jnp.int32), jnp.asarray(True),
+                     B0, norms0, picks0))
     return picks
+
+
+def phase2_select(key: jax.Array, Gs: Tuple[jax.Array, ...],
+                  sizes: Tuple[int, ...], k_eff: jax.Array,
+                  backend: Optional[str] = None) -> jax.Array:
+    """Single-sample phase-2 selection from a PRNG key (compat surface).
+
+    Draws the per-step uniforms and dispatches through the ops-level
+    entry point (``kernels.ops.phase2_select``): fused Pallas kernel on
+    TPU, ``phase2_select_reference`` elsewhere; ``backend`` forces one.
+    """
+    us = jax.random.uniform(key, (Gs[0].shape[1],))
+    return kernel_ops.phase2_select(us, Gs, sizes, k_eff, backend=backend)
 
 
 # ---------------------------------------------------------------------------
 # The batched sampler
 # ---------------------------------------------------------------------------
 
-def _sample_one(key: jax.Array, lams: Tuple[jax.Array, ...],
-                vecs: Tuple[jax.Array, ...], k_max: int
-                ) -> Tuple[jax.Array, jax.Array]:
+def _phase1_one(key: jax.Array, lams: Tuple[jax.Array, ...],
+                vecs: Tuple[jax.Array, ...], k_max: int):
+    """One sample's spectrum draw: (us, factored columns, k_eff, trunc)."""
     sizes = tuple(l.shape[0] for l in lams)
     # inclusion prob λ/(1+λ) = sigmoid(log λ), on the log-space fold so a
     # huge product spectrum never overflows to NaN probabilities
@@ -203,32 +240,40 @@ def _sample_one(key: jax.Array, lams: Tuple[jax.Array, ...],
     k1, k2 = jax.random.split(key)
     u = jax.random.uniform(k1, ll.shape)
     mask = u < jax.nn.sigmoid(ll)
-    sel, valid = compact_selection(mask, k_max)
+    sel, valid, truncated = compact_selection(mask, k_max)
     k_eff = jnp.minimum(jnp.sum(mask), k_max)
     Gs = gather_factor_columns(vecs, sizes, sel, valid)
-    picks = phase2_select(k2, Gs, sizes, k_eff)
-    return picks, k_eff.astype(jnp.int32)
+    us = jax.random.uniform(k2, (k_max,))
+    return us, Gs, k_eff.astype(jnp.int32), truncated
 
 
-@functools.partial(jax.jit, static_argnames=("k_max",))
-def _sample_batched(keys, lams, vecs, k_max):
-    return jax.vmap(lambda k: _sample_one(k, lams, vecs, k_max))(keys)
+@functools.partial(jax.jit, static_argnames=("k_max", "backend"))
+def _sample_batched(keys, lams, vecs, k_max, backend=None):
+    sizes = tuple(l.shape[0] for l in lams)
+    us, Gs, k_eff, truncated = jax.vmap(
+        lambda k: _phase1_one(k, lams, vecs, k_max))(keys)
+    picks = kernel_ops.phase2_select(us, Gs, sizes, k_eff, backend=backend)
+    return picks, k_eff, truncated
 
 
 def sample_krondpp_batched(key: jax.Array, spectrum: FactorSpectrum,
-                           k_max: Optional[int] = None, num_samples: int = 1
-                           ) -> Tuple[jax.Array, jax.Array]:
+                           k_max: Optional[int] = None, num_samples: int = 1,
+                           backend: Optional[str] = None
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Draw ``num_samples`` exact KronDPP samples in one device call.
 
     Returns (picks (num_samples, k_max) int32 with -1 padding,
-    counts (num_samples,) int32). One compile per (k_max, num_samples)
-    shape; repeat calls at the same shape reuse the executable.
+    counts (num_samples,) int32, truncated (num_samples,) bool — True for
+    draws whose |J| overflowed the static k_max budget and were clipped).
+    One compile per (k_max, num_samples) shape; repeat calls at the same
+    shape reuse the executable. ``backend`` selects the phase-2 engine
+    (None = auto: fused Pallas kernel on TPU, jax reference elsewhere).
     """
     if k_max is None:
         k_max = spectrum.suggested_k_max()
     keys = jax.random.split(key, num_samples)
     return _sample_batched(keys, tuple(spectrum.lams), tuple(spectrum.vecs),
-                           int(k_max))
+                           int(k_max), backend)
 
 
 def picks_to_lists(picks):

@@ -10,8 +10,9 @@ decrementing k on inclusion — exactly k eigenvectors survive. The ESP
 table e_j(λ_1..λ_n) is the O(N k) recursion e_j^n = e_j^{n-1} +
 λ_n e_{j-1}^{n-1}, computed in log-space (ESPs of 10^4+ eigenvalues
 overflow float range long before N does). Phase 2 is shared with
-``batched.py``: lazy eigenvector assembly + masked-scan projection
-selection, so the whole thing is jit/vmap clean.
+``batched.py``: lazy factored eigenvector gather, then one batched
+``kernels.ops.phase2_select`` call (fused Pallas kernel on TPU, jax
+reference elsewhere), so the whole thing is jit/vmap clean.
 
 The spectrum is factored — only the O(N) product eigenvalues are ever
 built, never the N eigenvectors — so a KronDPP k-DPP costs
@@ -23,12 +24,13 @@ stochastic KV-cache eviction.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .batched import compact_selection, gather_factor_columns, phase2_select
+from ..kernels import ops as kernel_ops
+from .batched import compact_selection, gather_factor_columns
 from .spectral import FactorSpectrum, log_product_spectrum
 
 _NEG_INF = -jnp.inf
@@ -51,11 +53,16 @@ def log_esp_table(log_lam: jax.Array, k: int) -> jax.Array:
 
 
 def _phase1_kdpp(key: jax.Array, log_lam: jax.Array, k: int) -> jax.Array:
-    """Conditional eigenvalue draw: (N,) bool mask with exactly k set
-    (assuming >= k nonzero eigenvalues; fewer and the trailing picks have
-    probability 0 and the mask carries < k — phase 2 masks them out)."""
+    """Conditional eigenvalue draw: (N,) bool mask with exactly
+    min(k, rank) set. |Y| = k conditions on a zero-probability event when
+    the kernel has fewer than k nonzero eigenvalues (every e_k denominator
+    is -inf) — an unclamped draw would degenerate to the empty mask — so
+    below rank this degrades to the largest achievable size and phase 2
+    pads the remaining row slots with -1."""
     N = log_lam.shape[0]
     table = log_esp_table(log_lam, k)
+    k0 = jnp.minimum(jnp.asarray(k, jnp.int32),
+                     jnp.sum(jnp.isfinite(log_lam)).astype(jnp.int32))
     u = jax.random.uniform(key, (N,))
 
     def body(k_rem, inp):
@@ -68,45 +75,66 @@ def _phase1_kdpp(key: jax.Array, log_lam: jax.Array, k: int) -> jax.Array:
         return k_rem - inc.astype(k_rem.dtype), inc
 
     ns = jnp.arange(N, 0, -1)
-    _, incs = jax.lax.scan(
-        body, jnp.asarray(k, jnp.int32), (ns, log_lam[::-1], u))
+    _, incs = jax.lax.scan(body, k0, (ns, log_lam[::-1], u))
     return incs[::-1]
 
 
-def _sample_one_kdpp(key: jax.Array, lams: Tuple[jax.Array, ...],
-                     vecs: Tuple[jax.Array, ...], k: int) -> jax.Array:
+def _phase1_one_kdpp(key: jax.Array, lams: Tuple[jax.Array, ...],
+                     vecs: Tuple[jax.Array, ...], k: int):
+    """One sample's conditional spectrum draw: (us, columns, k_eff)."""
     sizes = tuple(l.shape[0] for l in lams)
     ll = log_product_spectrum(lams)
     k1, k2 = jax.random.split(key)
     mask = _phase1_kdpp(k1, ll, k)
-    sel, valid = compact_selection(mask, k)
+    # the ESP draw sets at most k entries, so no truncation is possible;
+    # below numerical rank it sets fewer and phase 2 pads with -1
+    sel, valid, _ = compact_selection(mask, k)
     Gs = gather_factor_columns(vecs, sizes, sel, valid)
-    return phase2_select(k2, Gs, sizes, jnp.sum(mask))
+    us = jax.random.uniform(k2, (k,))
+    return us, Gs, jnp.sum(mask).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _sample_kdpp_batched(keys, lams, vecs, k):
-    return jax.vmap(lambda kk: _sample_one_kdpp(kk, lams, vecs, k))(keys)
+def _sample_one_kdpp(key: jax.Array, lams: Tuple[jax.Array, ...],
+                     vecs: Tuple[jax.Array, ...], k: int,
+                     backend: Optional[str] = None) -> jax.Array:
+    sizes = tuple(l.shape[0] for l in lams)
+    us, Gs, k_eff = _phase1_one_kdpp(key, lams, vecs, k)
+    return kernel_ops.phase2_select(us, Gs, sizes, k_eff, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend"))
+def _sample_kdpp_batched(keys, lams, vecs, k, backend=None):
+    sizes = tuple(l.shape[0] for l in lams)
+    us, Gs, k_eff = jax.vmap(
+        lambda kk: _phase1_one_kdpp(kk, lams, vecs, k))(keys)
+    return kernel_ops.phase2_select(us, Gs, sizes, k_eff, backend=backend)
 
 
 def sample_kdpp_batched(key: jax.Array, spectrum: FactorSpectrum, k: int,
-                        num_samples: int = 1) -> jax.Array:
+                        num_samples: int = 1,
+                        backend: Optional[str] = None) -> jax.Array:
     """``num_samples`` exact k-DPP samples in one device call.
 
     Returns (num_samples, k) int32 — every row has exactly k distinct
-    items when the kernel has rank >= k.
+    items when the kernel has rank >= k; below rank the draw degrades to
+    exactly rank distinct items with trailing -1 padding (never
+    duplicates, never an empty degenerate row). Phase 2 for the whole batch
+    is one ``kernels.ops.phase2_select`` call (fused Pallas kernel on TPU;
+    ``backend`` forces an engine).
     """
     keys = jax.random.split(key, num_samples)
     return _sample_kdpp_batched(keys, tuple(spectrum.lams),
-                                tuple(spectrum.vecs), int(k))
+                                tuple(spectrum.vecs), int(k), backend)
 
 
 def sample_kdpp_dense(key: jax.Array, L: jax.Array, k: int) -> jax.Array:
     """Exact k-DPP sample from a dense kernel, fully jit/vmap-able.
 
     The eigendecomposition happens inside the trace (m=1 spectrum), so this
-    composes with vmap over per-head kernels in the serving layer.
+    composes with vmap over per-head kernels in the serving layer. Phase 2
+    stays on the vmap-transparent reference engine.
     """
     lam, vec = jnp.linalg.eigh(L)
     lam = jnp.maximum(lam, 0.0)
-    return _sample_one_kdpp(key, (lam,), (vec,), int(k))
+    return _sample_one_kdpp(key, (lam,), (vec,), int(k),
+                            backend="reference")

@@ -57,6 +57,11 @@ class ServiceStats:
     samples_drawn: int = 0
     samples_requested: int = 0
     flushes: int = 0
+    #: draws whose |J| overflowed the static k_max budget and were clipped
+    #: to the lowest eigen-indices — a many-sigma event per draw at the
+    #: default E|Y| + 6σ budget, so a rising counter means k_max is
+    #: undersized for this kernel
+    truncations: int = 0
 
 
 class SamplingService:
@@ -145,10 +150,11 @@ class SamplingService:
         while len(drawn) < total:
             batch = min(remaining, self.max_batch)
             self._key, sub = jax.random.split(self._key)
-            picks, _ = sample_krondpp_batched(sub, self.spectrum,
-                                              self.k_max, batch)
+            picks, _, truncated = sample_krondpp_batched(sub, self.spectrum,
+                                                         self.k_max, batch)
             self.stats.device_calls += 1
             self.stats.samples_drawn += batch
+            self.stats.truncations += int(truncated.sum())
             drawn.extend(picks_to_lists(picks))
             remaining -= batch
         del self._pending[: len(tickets)]

@@ -177,9 +177,23 @@ def gain_for_expected_size(log_lams: "jax.Array", target: float,
     """Scalar gain g such that E|Y| = Σ σ(log g + log λ) hits ``target`` —
     bisection on log g over the log-space product spectrum, so huge kernels
     never overflow the fold. Shared by ``rescale_expected_size`` and the
-    ``repro.dpp`` facade's ``Model.rescale``."""
+    ``repro.dpp`` facade's ``Model.rescale``.
+
+    Raises ``ValueError`` when ``target`` is outside the achievable open
+    range (0, rank): E|Y| = Σ λ/(1+λ) tends to 0 as g -> 0 and to the
+    number of nonzero eigenvalues as g -> ∞, never reaching either end, so
+    the bisection used to silently saturate at its bounds (g ≈ e^±60) and
+    hand callers a wildly mis-scaled kernel instead of an error."""
     import numpy as np
     ll = np.asarray(log_lams, np.float64)
+    rank = int(np.isfinite(ll).sum())         # log λ = -inf for zero eigs
+    target = float(target)
+    if not np.isfinite(target) or target <= 0.0 or target >= rank:
+        raise ValueError(
+            f"target expected size {target} is not achievable: E|Y| = "
+            f"Σ λ/(1+λ) of this spectrum is confined to the open interval "
+            f"(0, {rank}) (rank = number of nonzero eigenvalues, "
+            f"N = {ll.size}); rescale to a size strictly inside it")
     lo, hi = -60.0, 60.0                      # g in [~1e-26, ~1e26]
     for _ in range(iters):
         mid = 0.5 * (lo + hi)
@@ -197,6 +211,9 @@ def rescale_expected_size(dpp: KronDPP, target: float,
     U[0, sqrt(2)] kernels have E|Y| ~ N, which buries any benchmark
     comparison under the shared O(N k³) selection cost; callers rescale to
     a workload-sized E|Y|.
+
+    Raises ``ValueError`` (from ``gain_for_expected_size``) when ``target``
+    lies outside the spectrum's achievable (0, rank) range.
     """
     lams = tuple(jnp.maximum(jnp.linalg.eigvalsh(f), 0.0)
                  for f in dpp.factors)

@@ -8,6 +8,10 @@ import pytest
 
 from repro.kernels import ops, ref
 
+# every test here drives a Pallas kernel through interpret mode on CPU;
+# the CI `pallas` job selects this marker so kernels run on every PR
+pytestmark = pytest.mark.pallas
+
 
 @pytest.mark.parametrize("n1,n2,batch", [(3, 4, 2), (8, 8, 5), (16, 12, 3),
                                          (128, 128, 4), (64, 96, 7)])

@@ -43,8 +43,8 @@ def test_singleton_and_pair_marginals_match_reference():
     K = np.asarray(marginal_kernel(np.asarray(m.full_matrix())))
     spec = SpectralCache().spectrum(m)
     S = 4000
-    picks, counts = sample_krondpp_batched(jax.random.PRNGKey(0), spec,
-                                           num_samples=S)
+    picks, counts, _ = sample_krondpp_batched(jax.random.PRNGKey(0), spec,
+                                              num_samples=S)
     mem = _membership(picks, m.N)
     # singleton: P(i in Y) = K_ii
     np.testing.assert_allclose(mem.mean(0), np.diag(K), atol=0.04)
@@ -66,8 +66,8 @@ def test_matches_host_reference_sampler_size_distribution():
     for _ in range(S):
         sizes_host[len(sample_krondpp(rng, m))] += 1
     spec = SpectralCache().spectrum(m)
-    _, counts = sample_krondpp_batched(jax.random.PRNGKey(1), spec,
-                                       num_samples=S)
+    _, counts, _ = sample_krondpp_batched(jax.random.PRNGKey(1), spec,
+                                          num_samples=S)
     sizes_dev = np.bincount(np.asarray(counts), minlength=7)[:7]
     assert np.abs(sizes_host - sizes_dev).max() / S < 0.08
 
@@ -76,8 +76,8 @@ def test_three_factor_kernel():
     m = random_krondpp(jax.random.PRNGKey(2), (2, 2, 2))
     K = np.asarray(marginal_kernel(np.asarray(m.full_matrix())))
     spec = SpectralCache().spectrum(m)
-    picks, _ = sample_krondpp_batched(jax.random.PRNGKey(4), spec,
-                                      num_samples=3000)
+    picks, _, _ = sample_krondpp_batched(jax.random.PRNGKey(4), spec,
+                                         num_samples=3000)
     mem = _membership(picks, 8)
     np.testing.assert_allclose(mem.mean(0), np.diag(K), atol=0.05)
 
@@ -133,8 +133,8 @@ def test_huge_spectrum_no_float32_overflow():
     spec = SpectralCache().spectrum(big)
     assert np.isfinite(spec.expected_size())
     assert abs(spec.expected_size() - 16.0) < 1e-3          # p -> 1
-    picks, counts = sample_krondpp_batched(jax.random.PRNGKey(0), spec,
-                                           num_samples=4)
+    picks, counts, _ = sample_krondpp_batched(jax.random.PRNGKey(0), spec,
+                                              num_samples=4)
     assert (np.asarray(counts) == 16).all()                 # everything in
     svc = SamplingService(big)                              # no NaN ceil
     assert all(len(s) == 16 for s in svc.sample(2))
