@@ -12,7 +12,7 @@ def main() -> None:
                    paper_fig1_synthetic, paper_fig1c_stochastic,
                    paper_sec4_batched_sampling, paper_sec4_phase2_fused,
                    paper_sec4_sampling, paper_table1_quality,
-                   paper_table2_runtime, roofline)
+                   paper_table2_runtime, roofline, runtime_scaling)
 
     print("name,us_per_call,derived")
     for mod in (paper_fig1_synthetic, paper_fig1c_stochastic,
@@ -20,7 +20,7 @@ def main() -> None:
                 paper_table1_quality, paper_table2_runtime,
                 paper_sec4_sampling, paper_sec4_batched_sampling,
                 paper_sec4_phase2_fused,
-                facade_api,
+                facade_api, runtime_scaling,
                 kernel_bench, roofline):
         try:
             mod.main()

@@ -1,0 +1,120 @@
+"""Local vs Mesh runtime scaling — samples/s and sweeps/s over one seam.
+
+Sweeps the ``repro.dpp.runtime`` placements against each other on the
+same model and keys: batched exact sampling (``model.sample``) and KrK
+learning (``model.fit``, constant schedule + sharded stochastic
+minibatches) under ``Local()`` vs ``Mesh(axes={"data": P})``.
+
+On a single-device interpreter (the committed-report path on CPU) the
+measurement reruns itself in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``. Reading the CPU
+numbers honestly: 8 forced host devices still share one CPU's cores, so
+ratios here bound the *sharding overhead* (shard_map launch + psum on
+shared memory) plus whatever per-device thread parallelism XLA's CPU
+client grants — the committed report shows ~1.5-2.4x on sampling and
+~3.3x on sharded stochastic sweeps (each shard selects and folds 1/P of
+the minibatch statistics). The compiled TPU/GPU fleet path, where shards
+are real hardware, is the actual payoff; the equivalence tests
+(tests/test_runtime.py) pin that the math is placement-invariant, so the
+only thing a fleet changes is the wall clock.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_MARKER = "RUNTIME_SCALING_JSON:"
+
+
+def _measure() -> dict:
+    import jax
+    import numpy as np
+
+    from repro import dpp
+
+    from .common import timed
+
+    n_dev = jax.device_count()
+    rt = dpp.Mesh(axes={"data": n_dev})
+    model = dpp.random_kron(jax.random.PRNGKey(0), (16, 16)).rescale(12.0)
+    rows = []
+
+    # -- sampling: samples/s at two batch sizes -----------------------------
+    for batch in (256, 1024):
+        t_loc, _ = timed(lambda b=batch: model.sample(
+            jax.random.PRNGKey(1), b), repeats=3)
+        t_msh, _ = timed(lambda b=batch: model.sample(
+            jax.random.PRNGKey(1), b, runtime=rt), repeats=3)
+        rows.append({
+            "workload": f"sample_batch{batch}",
+            "local_per_sec": round(batch / t_loc, 1),
+            "mesh_per_sec": round(batch / t_msh, 1),
+            "mesh_over_local": round(t_loc / t_msh, 3),
+        })
+
+    # -- learning: sweeps/s, full-batch krk and sharded stochastic ----------
+    data = model.sample(jax.random.PRNGKey(2), 256)
+    init = dpp.random_kron(jax.random.PRNGKey(3), (16, 16))
+    for algo, kw in (("krk", {}),
+                     ("krk-stochastic", {"minibatch_size": 8 * n_dev})):
+        rep_l = init.fit(data, algorithm=algo, iters=6, a=0.7,
+                         ll_mode="none", log_every=6, **kw)
+        rep_m = init.fit(data, algorithm=algo, iters=6, a=0.7,
+                         ll_mode="none", log_every=6, runtime=rt, **kw)
+        rows.append({
+            "workload": f"fit_{algo}_n256",
+            "local_per_sec": round(rep_l.sweeps_per_sec, 2),
+            "mesh_per_sec": round(rep_m.sweeps_per_sec, 2),
+            "mesh_over_local": round(
+                rep_m.sweeps_per_sec / rep_l.sweeps_per_sec, 3),
+        })
+        if algo == "krk":   # placement must not move the answer
+            assert np.allclose(np.asarray(rep_m.model.factors[0]),
+                               np.asarray(rep_l.model.factors[0]),
+                               rtol=1e-4, atol=1e-4)
+
+    return {"devices": n_dev, "platform": jax.default_backend(),
+            "rows": rows}
+
+
+def run() -> dict:
+    import jax
+    if jax.device_count() > 1:
+        return _measure()
+    # single-device interpreter: fork with forced host devices so the mesh
+    # axis has something to shard over
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.runtime_scaling", "--inner"],
+        capture_output=True, text=True, env=env, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    for line in out.stdout.splitlines():
+        if line.startswith(_MARKER):
+            res = json.loads(line[len(_MARKER):])
+            res["forced_host_devices"] = True
+            return res
+    raise RuntimeError(f"no {_MARKER} line in subprocess output")
+
+
+def main() -> None:
+    from .common import json_report
+    res = run()
+    json_report("runtime_scaling", res)
+    for row in res["rows"]:
+        print(f"runtime_scaling/{row['workload']},"
+              f"{row['mesh_per_sec']},x{row['mesh_over_local']}")
+
+
+if __name__ == "__main__":
+    if "--inner" in sys.argv:
+        print(_MARKER + json.dumps(_measure(), sort_keys=True))
+    else:
+        main()

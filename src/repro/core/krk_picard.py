@@ -78,12 +78,15 @@ def AC_from_dense_theta(theta: jax.Array, L1: jax.Array, L2: jax.Array
                         ) -> Tuple[jax.Array, jax.Array]:
     """Paper's batch route: A_{kl} = Tr(Θ_(kl) L2), C = Σ_{ij} L1_{ij} Θ_(ij).
 
-    These are the contractions the `partial_trace` Pallas kernel implements.
+    Routed through ``kernels.ops.partial_trace_A/C`` — the Pallas
+    partial-trace kernels on TPU (VMEM-tiled Θ slabs), their jnp einsum
+    oracles elsewhere — so the engine's ``use_dense_theta=True`` batch
+    mode IS the kernel's consumer rather than a parallel einsum path.
     """
-    N1, N2 = L1.shape[0], L2.shape[0]
-    T4 = theta.reshape(N1, N2, N1, N2)
-    A = jnp.einsum("kulv,vu->kl", T4, L2)
-    C = jnp.einsum("iujv,ij->uv", T4, L1)
+    from ..kernels import ops as kernel_ops   # lazy: core must not need
+    N1, N2 = L1.shape[0], L2.shape[0]         # kernels at import time
+    A = kernel_ops.partial_trace_A(theta, L2, N1, N2)
+    C = kernel_ops.partial_trace_C(theta, L1, N1, N2)
     return A, C
 
 

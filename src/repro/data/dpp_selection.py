@@ -6,12 +6,18 @@ offsets. L1 models inter-shard similarity (e.g. topic centroids), L2
 intra-shard similarity. Exact sampling costs O(N1^3 + N2^3 + N k^3) per batch
 (paper Sec. 4).
 
-Two backends:
-  "device" (default) — ``model.service()``: the factor eigendecompositions
-      are cached once in a SpectralCache and ``prefetch`` samples are drawn
-      per vmapped device call into a FIFO buffer, so steady-state selection
-      is one device call every ``prefetch`` batches.
-  "host" — ``model.sample(backend="host")``, the numpy reference oracle.
+Placement is a ``repro.dpp.runtime`` Runtime:
+  ``Local()`` (default) — ``model.service()``: the factor
+      eigendecompositions are cached once in a SpectralCache and
+      ``prefetch`` samples are drawn per vmapped device call into a FIFO
+      buffer, so steady-state selection is one device call every
+      ``prefetch`` batches.
+  ``Mesh(axes=...)`` — the same service with each flush's key batch
+      sharded over the mesh (identical draws).
+  ``Host()`` — ``model.sample(runtime=Host())``, the numpy reference
+      oracle.
+The pre-runtime ``backend="device"|"host"`` strings keep working as
+DeprecationWarning shims.
 
 The factor kernels can be LEARNED from batches that trained well (any subset
 signal) via ``model.fit`` — `fit_from_subsets` wires that in.
@@ -28,6 +34,7 @@ import jax.numpy as jnp
 
 from ..core.dpp import SubsetBatch
 from ..dpp import Kron
+from ..dpp import runtime as runtime_mod
 
 
 def _rbf_kernel(X: np.ndarray, gamma: Optional[float] = None,
@@ -43,17 +50,24 @@ class DPPBatchSelector:
     dpp: Kron                    # the facade model over the corpus
     n1: int
     n2: int
-    backend: str = "device"      # "device" (batched subsystem) or "host"
+    #: execution placement (repro.dpp.runtime); None = Local()
+    runtime: Optional[runtime_mod.Runtime] = None
     prefetch: int = 16           # samples per coalesced device call
+    #: deprecated "device"/"host" placement string (shimmed onto runtime)
+    backend: Optional[str] = None
 
     def __post_init__(self):
+        self.runtime = runtime_mod.resolve(self.runtime,
+                                           backend=self.backend)
+        self.backend = None      # consumed; replace() must not re-warn
         self._service = None
         self._buffer: List[List[int]] = []
 
     @staticmethod
     def from_features(doc_features: np.ndarray, n1: int, n2: int,
-                      scale: float = 1.0, backend: str = "device"
-                      ) -> "DPPBatchSelector":
+                      scale: float = 1.0,
+                      runtime: Optional[runtime_mod.Runtime] = None,
+                      backend: Optional[str] = None) -> "DPPBatchSelector":
         """Build factor kernels from doc features (n1*n2, d).
 
         L1: RBF over shard centroids; L2: RBF over within-shard mean offsets.
@@ -63,7 +77,7 @@ class DPPBatchSelector:
         L2 = _rbf_kernel(F.mean(axis=0)) * scale
         return DPPBatchSelector(
             Kron((jnp.asarray(L1, jnp.float32), jnp.asarray(L2, jnp.float32))),
-            n1, n2, backend=backend)
+            n1, n2, runtime=runtime, backend=backend)
 
     # -- sampling ------------------------------------------------------------
     def reset(self) -> None:
@@ -73,18 +87,18 @@ class DPPBatchSelector:
         self._service = None
 
     def _draw_subset(self, rng: np.random.Generator) -> np.ndarray:
-        if self.backend == "host":
+        if self.runtime.kind == "host":
             # key derived from the pipeline rng stream keeps restore/replay
             # deterministic, same as the device service seed below
             key = jax.random.PRNGKey(int(rng.integers(2 ** 31)))
-            sub = self.dpp.sample(key, backend="host").to_lists()[0]
+            sub = self.dpp.sample(key, runtime=self.runtime).to_lists()[0]
             return np.asarray(sub, np.int64)
         if not self._buffer:
             if self._service is None:
                 # Service PRNG is derived from the pipeline rng stream, so
                 # restore/replay reproduces the same device draws.
                 self._service = self.dpp.service(
-                    seed=int(rng.integers(2 ** 31)))
+                    seed=int(rng.integers(2 ** 31)), runtime=self.runtime)
             self._buffer = self._service.sample(self.prefetch)
         return np.asarray(self._buffer.pop(0), np.int64)
 
@@ -111,11 +125,17 @@ class DPPBatchSelector:
         — e.g. ``armijo()`` — to guarantee PSD factors + monotone ascent)."""
         k_max = max(len(s) for s in subsets)
         batch = SubsetBatch.from_lists(subsets, k_max)
+        # learning follows the selector's placement (the host oracle has
+        # no learner — that combination trains locally)
+        fit_rt = self.runtime if self.runtime.kind != "host" else None
+        if fit_rt is not None and fit_rt.is_mesh:
+            batch = fit_rt.even_batch(batch)
         rep = self.dpp.fit(batch,
                            algorithm="krk" if minibatch_size is None
                            else "krk-stochastic",
                            iters=iters, a=a, schedule=schedule,
                            minibatch_size=minibatch_size,
                            track_ll=log_every > 0,
-                           log_every=log_every or iters)
+                           log_every=log_every or iters,
+                           runtime=fit_rt)
         return dataclasses.replace(self, dpp=rep.model)

@@ -25,22 +25,39 @@ machinery, so both ride the same device-resident pipelines
 (``repro.sampling``, ``repro.learning``) and the same ``SpectralCache``.
 In-trace consumers (vmapped serving paths) use ``repro.dpp.functional``.
 
-The pre-facade free functions (``core.sample_krondpp_batch``,
-``core.fit_krk_picard``, bare ``repro.sampling.sample_*``) are deprecated
-shims onto this API.
+WHERE that work runs is owned by one placement seam —
+``repro.dpp.runtime``. A ``Runtime`` object (``Local()``,
+``Mesh(axes={"data": n})``, ``Host()``) is THE placement entry point:
+pass it as ``runtime=`` to ``model.sample`` / ``model.fit`` /
+``model.spectrum`` / ``model.service``:
+
+    from repro.dpp import runtime
+    rt = runtime.Mesh(axes={"data": 8})        # SPMD over 8 devices
+    batch = model.sample(jax.random.PRNGKey(1), 4096, runtime=rt)
+    report = model.fit(batch, schedule=dpp.schedules.armijo(), runtime=rt)
+
+Under ``Mesh`` the key batch / training subsets are sharded over the data
+axes and reductions are psum'd; draws and fits reproduce ``Local`` on
+shared keys (bit-for-bit for sampling). The pre-runtime placement
+spellings — ``backend="device"|"host"`` strings, ``fit(mesh=...)``, the
+``--distributed`` CLI flag — are DeprecationWarning shims onto runtimes,
+as are the pre-facade free functions (``core.sample_krondpp_batch``,
+``core.fit_krk_picard``, bare ``repro.sampling.sample_*``).
 """
 
 from ..learning import schedules
 from ..sampling.service import SampleTicket, SamplingService
 from ..sampling.spectral import FactorSpectrum, SpectralCache, default_cache
-from . import functional
+from . import functional, runtime
 from .model import (MAX_DENSE_N, Dense, DPPModel, Kron, from_factors,
                     from_kernel, random_kron)
+from .runtime import Host, Local, Mesh, Runtime
 
 __all__ = [
     "DPPModel", "Dense", "Kron", "MAX_DENSE_N",
     "from_kernel", "from_factors", "random_kron",
     "functional", "schedules",
+    "runtime", "Runtime", "Local", "Mesh", "Host",
     "FactorSpectrum", "SpectralCache", "default_cache",
     "SamplingService", "SampleTicket",
 ]

@@ -15,9 +15,11 @@ rescaling, and learning. Two first-class implementations:
 Everything host-facing dispatches through the spectrum: per-factor
 eigendecompositions held in a ``SpectralCache`` (eigh paid once per factor
 identity), the product spectrum folded in log space so huge kernels never
-overflow. The scaling items on the roadmap (sharded sampling, Pallas
-phase-2, streaming spectra) swap in behind these methods without touching
-callers.
+overflow. WHERE the work runs is a separate, orthogonal axis owned by
+``repro.dpp.runtime``: ``sample`` / ``fit`` / ``spectrum`` / ``service``
+take ``runtime=`` (``Local()`` default, ``Mesh(axes={"data": n})`` for
+SPMD sharding, ``Host()`` for the numpy oracle) — the pre-runtime
+``backend=`` strings survive only as DeprecationWarning shims.
 
 These models are host-level entry points (they make shape decisions like
 ``suggested_k_max`` off concrete spectra). Inside a jit trace, use the
@@ -42,6 +44,7 @@ from ..sampling.kdpp import sample_kdpp_batched
 from ..sampling.service import SamplingService
 from ..sampling.spectral import (FactorSpectrum, SpectralCache, default_cache,
                                  gain_for_expected_size)
+from . import runtime as runtime_mod
 
 #: Guard for operations that must materialize the full N x N kernel
 #: (``Kron.condition`` / ``Kron.map`` dense fallbacks). Raising it is an
@@ -58,6 +61,20 @@ def _as_index_set(idx, n: int) -> jnp.ndarray:
     if arr.size and (arr.min() < 0 or arr.max() >= n):
         raise ValueError(f"indices out of range [0, {n}): {idx!r}")
     return jnp.asarray(np.unique(arr), jnp.int32)
+
+
+def _place_spectrum(spec: FactorSpectrum,
+                    runtime: Optional[runtime_mod.Runtime]
+                    ) -> FactorSpectrum:
+    """Replicate a spectrum's arrays over a mesh runtime (identity for
+    Local/Host/None). Uses the mesh's identity-pinned cache: spectrum
+    arrays are themselves cached (``SpectralCache``), so repeated
+    sampling against one kernel pays the host -> devices broadcast once,
+    not per call."""
+    if runtime is not None and getattr(runtime, "is_mesh", False):
+        return FactorSpectrum(runtime.replicate_pinned(tuple(spec.lams)),
+                              runtime.replicate_pinned(tuple(spec.vecs)))
+    return spec
 
 
 def _picks_to_subsets(picks: jax.Array,
@@ -108,13 +125,16 @@ class DPPModel:
         return KronDPP(tuple(self.factors)).full_matrix()
 
     # -- spectrum -----------------------------------------------------------
-    def spectrum(self, cache: Optional[SpectralCache] = None
+    def spectrum(self, cache: Optional[SpectralCache] = None,
+                 runtime: Optional[runtime_mod.Runtime] = None
                  ) -> FactorSpectrum:
         """Per-factor eigendecompositions off a ``SpectralCache`` —
         O(Σ N_i³) on first touch, O(1) for every later call against the
-        same factor arrays."""
+        same factor arrays. Under a ``Mesh`` runtime the spectrum arrays
+        are placed replicated over the mesh (the cache entry itself stays
+        device-agnostic)."""
         cache = cache if cache is not None else default_cache()
-        return cache.spectrum(self)
+        return _place_spectrum(cache.spectrum(self), runtime)
 
     def expected_size(self, cache: Optional[SpectralCache] = None) -> float:
         """E|Y| = Σ λ/(1+λ) off the log-space product spectrum."""
@@ -137,42 +157,48 @@ class DPPModel:
     # -- sampling -----------------------------------------------------------
     def sample(self, key: jax.Array,
                batch_shape: Union[int, Tuple[int, ...]] = (),
-               k: Optional[int] = None, backend: str = "device",
+               k: Optional[int] = None,
+               runtime: Optional[runtime_mod.Runtime] = None,
                k_max: Optional[int] = None,
-               cache: Optional[SpectralCache] = None) -> SubsetBatch:
+               cache: Optional[SpectralCache] = None,
+               backend: Optional[str] = None) -> SubsetBatch:
         """Exact DPP (or, with ``k``, k-DPP) samples as a ``SubsetBatch``.
 
         batch_shape: int or tuple; the returned batch has n = prod(shape)
             rows (1 for the default ``()``).
-        backend: "device" — the batched jit+vmap subsystem, one device
-            call for the whole batch; "host" — the numpy reference oracle
-            (k=None only), one eigh + one subset per draw.
+        runtime: execution placement (``repro.dpp.runtime``):
+            ``Local()`` / None — the batched jit+vmap subsystem, one
+            device call for the whole batch; ``Mesh(axes={"data": n})`` —
+            the same pipeline with the key batch sharded over the mesh
+            (draws match Local bit-for-bit on shared keys); ``Host()`` —
+            the numpy reference oracle (k=None only), one eigh + one
+            subset per draw.
         k_max: static phase-2 budget override for the device DPP path
             (defaults to the spectrum's E|Y| + 6σ bound).
+        backend: deprecated placement strings ("device"/"host"), shimmed
+            onto runtimes with a DeprecationWarning.
         """
+        rt = runtime_mod.resolve(runtime, backend=backend)
         shape = (batch_shape,) if isinstance(batch_shape, int) \
             else tuple(batch_shape)
         n = 1
         for s in shape:
             n *= int(s)
-        if backend == "host":
+        if rt.kind == "host":
             if k is not None:
-                raise ValueError("backend='host' implements the plain DPP "
-                                 "oracle only (k=None); use the device "
-                                 "backend for k-DPP draws")
+                raise ValueError("the Host runtime implements the plain "
+                                 "DPP oracle only (k=None); use Local/Mesh "
+                                 "for k-DPP draws")
             return self._sample_host(key, n)
-        if backend != "device":
-            raise ValueError(f"backend must be 'device' or 'host', "
-                             f"got {backend!r}")
-        spec = self.spectrum(cache)
+        spec = self.spectrum(cache, runtime=rt)
         if k is not None:
             # exact-k draws cannot overflow their k-slot budget
-            return _picks_to_subsets(sample_kdpp_batched(key, spec,
-                                                         int(k), n))
+            return _picks_to_subsets(sample_kdpp_batched(key, spec, int(k),
+                                                         n, runtime=rt))
         if k_max is None:
             k_max = spec.suggested_k_max()
-        picks, _, truncated = sample_krondpp_batched(key, spec,
-                                                     int(k_max), n)
+        picks, _, truncated = sample_krondpp_batched(key, spec, int(k_max),
+                                                     n, runtime=rt)
         return _picks_to_subsets(picks, truncated)
 
     def _sample_host(self, key: jax.Array, n: int) -> SubsetBatch:
@@ -190,7 +216,8 @@ class DPPModel:
 
     def service(self, **kwargs) -> SamplingService:
         """A micro-batching ``SamplingService`` over this model (submit /
-        coalesce / one vmapped device call / scatter)."""
+        coalesce / one vmapped device call / scatter). Pass
+        ``runtime=Mesh(...)`` to shard every flush over a mesh."""
         return SamplingService(self, **kwargs)
 
     # -- likelihood ---------------------------------------------------------
@@ -288,9 +315,11 @@ class DPPModel:
         engine. Returns the engine's ``FitReport`` with ``report.model``
         wrapped back into a facade model (``Kron`` for krk/joint,
         ``Dense`` for em). All engine kwargs (iters, schedule,
-        minibatch_size, checkpoint_dir, mesh, ...) pass through;
-        ``max_dense`` bounds the dense materialization a Kron model needs
-        for ``algorithm="em"``."""
+        minibatch_size, checkpoint_dir, runtime, ...) pass through —
+        ``runtime=Mesh(axes={"data": n})`` runs mesh-sharded KrK sweeps
+        (Θ-statistics and Armijo acceptance LLs psum'd over the data
+        axes); ``max_dense`` bounds the dense materialization a Kron
+        model needs for ``algorithm="em"``."""
         from ..learning.api import fit as _fit
         if algorithm is None:
             algorithm = self._default_algorithm
@@ -328,10 +357,11 @@ class Dense(DPPModel):                 # raise on ambiguous truth values
     def dense_kernel(self, max_dense: int = MAX_DENSE_N) -> jax.Array:
         return self.L          # already dense; no guard needed
 
-    def spectrum(self, cache: Optional[SpectralCache] = None
+    def spectrum(self, cache: Optional[SpectralCache] = None,
+                 runtime: Optional[runtime_mod.Runtime] = None
                  ) -> FactorSpectrum:
         cache = cache if cache is not None else default_cache()
-        return cache.spectrum_dense(self.L)
+        return _place_spectrum(cache.spectrum_dense(self.L), runtime)
 
     def _wrap_factors(self, factors):
         return Dense(factors[0])

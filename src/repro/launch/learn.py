@@ -9,14 +9,17 @@ Single-process usage (CPU smoke):
 Training data is drawn from a ground-truth model with ``model.sample`` (one
 vmapped device call for the whole dataset), then the chosen learner runs
 through ``model.fit`` — scan-compiled chunks, checkpoint/resume, and (with
---distributed, under forced host devices or a real fleet) the mesh-sharded
-KrK step.
+``--runtime mesh``, under forced host devices or a real fleet) the
+mesh-sharded KrK sweep: Θ-statistics and Armijo acceptance LLs psum'd over
+the data axis, per-shard stochastic minibatches. The old ``--distributed``
+flag is a DeprecationWarning alias for ``--runtime mesh``.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import warnings
 
 
 def main():
@@ -45,8 +48,13 @@ def main():
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--save-every", type=int, default=None)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--runtime", default=None,
+                    choices=["local", "mesh"],
+                    help="execution placement (repro.dpp.runtime): 'mesh' "
+                         "shards the batch over all devices ('data' axis); "
+                         "default local")
     ap.add_argument("--distributed", action="store_true",
-                    help="shard the batch over all devices ('data' mesh)")
+                    help="(deprecated) alias for --runtime mesh")
     ap.add_argument("--max-dense", type=int, default=None,
                     help="raise the dense-materialization guard (em on a "
                          "Kron model needs N <= this; default 4096)")
@@ -54,8 +62,7 @@ def main():
     args = ap.parse_args()
 
     import jax
-    from ..core import SubsetBatch
-    from ..dpp import MAX_DENSE_N, random_kron, schedules
+    from ..dpp import MAX_DENSE_N, random_kron, runtime, schedules
 
     # ---- ground-truth model + device-drawn training subsets ----
     key = jax.random.PRNGKey(args.seed)
@@ -67,14 +74,15 @@ def main():
     init = random_kron(jax.random.PRNGKey(args.seed + 1),
                        (args.n1, args.n2))
 
-    mesh = None
     if args.distributed:
-        from .mesh import make_mesh_from_devices
-        devs = jax.devices()
-        mesh = make_mesh_from_devices(devs, (len(devs),), ("data",))
-        if batch.n % len(devs):   # shard_map needs n divisible by the axis
-            batch = SubsetBatch(batch.indices[: batch.n - batch.n % len(devs)],
-                                batch.mask[: batch.n - batch.n % len(devs)])
+        if args.runtime is not None:    # one source of placement truth,
+            ap.error("pass --runtime or --distributed, not both")  # as in
+        warnings.warn("--distributed is deprecated; use --runtime mesh",
+                      DeprecationWarning, stacklevel=2)   # runtime.resolve
+        args.runtime = "mesh"
+    rt = runtime.from_spec(args.runtime or "local")
+    if rt.is_mesh:
+        batch = rt.even_batch(batch)  # shard_map needs even data shards
 
     rep = init.fit(batch, algorithm=args.algorithm, iters=args.iters,
                    max_dense=args.max_dense or MAX_DENSE_N,
@@ -84,7 +92,8 @@ def main():
                    use_dense_theta=args.dense_theta,
                    fresh_theta=not args.stale_theta,
                    checkpoint_dir=args.checkpoint_dir,
-                   save_every=args.save_every, resume=args.resume, mesh=mesh)
+                   save_every=args.save_every, resume=args.resume,
+                   runtime=rt)
 
     for sweep, ll in zip(rep.ll_sweeps, rep.log_likelihoods):
         print(json.dumps({"sweep": sweep, "ll": round(ll, 4)}))

@@ -27,8 +27,10 @@ schedules.py  step-size policies for ``a``: constant, a0/sqrt(1+t), and
               guarantees PSD iterates + per-sweep ascent (Thm 3.2).
 api.py        ``fit(model, batch, algorithm=..., ...)`` — one entry for
               all learners, ``CheckpointManager`` save/resume of the
-              learner state, and the mesh-sharded mode that drops in
-              ``core.distributed.make_distributed_krk_step``.
+              learner state, and the ``repro.dpp.runtime`` placement
+              seam: ``runtime=Mesh(...)`` drives the sharded sweep of
+              ``core.distributed.make_distributed_krk_sweep`` (psum'd
+              Θ-stats + Armijo acceptance LL, per-shard minibatches).
 
 Per-sweep complexity (m = 2 factors, n subsets of size <= κ, minibatch b,
 P data-parallel devices; N = N1·N2, factor eigh = N1³ + N2³ = O(N^{3/2})):

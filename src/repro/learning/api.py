@@ -3,13 +3,19 @@
 Unifies the three learners of the paper's Sec. 3 behind the compiled
 engine, with a common ``LearnerState`` pytree that checkpoints and
 resumes mid-fit (factors, sweep counter, RNG key, schedule carry), and a
-distributed mode that drops in ``core.distributed.make_distributed_krk_step``
-for mesh-sharded Θ-statistics.
+``repro.dpp.runtime`` placement seam: ``runtime=Mesh(axes={"data": n})``
+runs KrK sweeps through ``core.distributed.make_distributed_krk_sweep``
+— Θ-statistics and acceptance log-likelihoods psum'd over the data axes,
+per-shard stochastic minibatches, full constant/1-√t/Armijo schedule
+parity with the local engine.
 
     from repro.learning import fit, schedules
     rep = fit(model, batch, algorithm="krk-stochastic", iters=200,
               minibatch_size=64, schedule=schedules.armijo(a0=1.5),
               log_every=10, checkpoint_dir="/tmp/krondpp", save_every=50)
+
+The pre-runtime ``mesh=`` keyword still works as a DeprecationWarning
+shim onto ``runtime=Mesh.from_jax_mesh(mesh)``.
 """
 
 from __future__ import annotations
@@ -90,7 +96,8 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
         track_ll: bool = True, ll_mode: Optional[str] = None,
         use_dense_theta: bool = False, fresh_theta: bool = True,
         checkpoint_dir: Optional[str] = None, save_every: Optional[int] = None,
-        resume: bool = False, mesh=None, power_iters: int = 50) -> FitReport:
+        resume: bool = False, mesh=None, runtime=None,
+        power_iters: int = 50) -> FitReport:
     """Fit a (Kron)DPP to a subset batch with the device-resident engine.
 
     algorithm: "krk" (batch Alg. 1), "krk-stochastic" (on-device
@@ -105,10 +112,21 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
         ``repro.checkpoint.CheckpointManager`` every ``save_every`` sweeps
         (rounded up to chunk boundaries) and resume from the latest
         committed state, continuing the exact key/schedule stream.
-    mesh: a jax Mesh with a "data" axis — sweeps run through
-        ``core.distributed.make_distributed_krk_step`` (krk only) with the
-        batch sharded over the mesh.
+    runtime: a ``repro.dpp.runtime`` placement — ``Local()`` (default)
+        compiles sweeps on one device; ``Mesh(axes={"data": n})`` runs
+        krk / krk-stochastic through the mesh-sharded sweep
+        (``core.distributed.make_distributed_krk_sweep``): Θ-statistics
+        and Armijo acceptance LLs psum'd over the data axes, per-shard
+        minibatch selection. The batch size must divide the data-shard
+        count (``runtime.even_batch`` trims).
+    mesh: deprecated — a raw jax Mesh, shimmed onto
+        ``runtime=Mesh.from_jax_mesh(mesh)`` with a DeprecationWarning.
     """
+    from ..dpp import runtime as runtime_mod
+    rt = runtime_mod.resolve(runtime, mesh=mesh, stacklevel=3)
+    if rt.kind == "host":
+        raise ValueError("learning has no host runtime; use Local() or "
+                         "Mesh(...)")
     if algorithm not in ALGORITHMS:
         raise ValueError(f"algorithm must be one of {ALGORITHMS}, "
                          f"got {algorithm!r}")
@@ -154,9 +172,9 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
             manager.save(sweep, st)
             last_saved = sweep
 
-    if mesh is not None:
-        state, run_lls, run_sweeps, times = _run_distributed(
-            engine, state, batch, remaining, log_every, mesh, schedule,
+    if rt.is_mesh:
+        state, run_lls, run_sweeps, times = _run_mesh(
+            engine, state, batch, remaining, log_every, rt, schedule,
             checkpoint_cb, algorithm)
     else:
         state, run_lls, run_sweeps, times = engine.run(
@@ -178,23 +196,46 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
         sweeps_per_sec=(remaining / total_t) if total_t > 0 else float("inf"))
 
 
-def _run_distributed(engine: LearningEngine, state: LearnerState,
-                     batch: SubsetBatch, iters: int, log_every: int, mesh,
-                     schedule: schedules_mod.Schedule, callback, algorithm):
-    """KrK sweeps through the mesh-sharded step: Θ-statistics psum over the
-    data axes, updates replicated (optionally TP-sharded). Host-driven per
-    sweep, but LL still chunked via the factored objective."""
-    if algorithm not in ("krk", "krk-stochastic"):
-        raise ValueError("distributed mode implements the KrK-Picard "
-                         f"learner only, got {algorithm!r}")
-    if schedule.kind == "armijo":
-        raise ValueError("Armijo backtracking is not wired into the "
-                         "distributed step; use constant/inv_sqrt")
-    from ..core.distributed import make_distributed_krk_step, shard_subsets
+def _run_mesh(engine: LearningEngine, state: LearnerState,
+              batch: SubsetBatch, iters: int, log_every: int, runtime,
+              schedule: schedules_mod.Schedule, callback, algorithm):
+    """KrK sweeps through the mesh-sharded sweep region: Θ-statistics and
+    Armijo acceptance LLs psum'd over the data axes, per-shard stochastic
+    minibatches, updates replicated. Host-driven per sweep (the scan-
+    compiled chunking stays a Local-runtime feature), but the sweep body
+    is one compiled SPMD call and tracked LL still syncs per chunk.
 
-    step = make_distributed_krk_step(mesh)
-    sbatch = shard_subsets(mesh, batch)
-    L1, L2 = state.params
+    The per-sweep key chain is the engine's (``key, k_sel = split(key)``),
+    so Local and Mesh consume identical key streams — the runtime changes
+    where a sweep runs, never which random stream it sees.
+    """
+    if algorithm not in ("krk", "krk-stochastic"):
+        raise ValueError("the mesh runtime implements the KrK-Picard "
+                         f"learner only, got {algorithm!r}")
+    if engine.use_dense_theta:
+        raise ValueError("use_dense_theta is a single-device route (dense "
+                         "Θ is O(N²)); the mesh runtime accumulates the "
+                         "sparse per-subset statistics")
+    from ..core.distributed import make_distributed_krk_sweep
+
+    shards = runtime.num_data_shards
+    if batch.n % shards:
+        raise ValueError(
+            f"batch of {batch.n} subsets does not divide the mesh's "
+            f"{shards} data shards; trim with runtime.even_batch(batch)")
+    if engine.minibatch_size and engine.minibatch_size > batch.n:
+        # Local raises this from jax.random.choice; the sharded Fisher-
+        # Yates draw would otherwise silently clip each shard's share
+        raise ValueError(
+            f"cannot draw minibatches of {engine.minibatch_size} from a "
+            f"batch of {batch.n} subsets")
+    sweep = make_distributed_krk_sweep(
+        runtime.mesh, schedule, data_axes=runtime.data_axes,
+        minibatch_size=engine.minibatch_size,
+        fresh_theta=engine.fresh_theta)
+    sbatch = runtime.shard_batch(batch)
+    L1, L2 = runtime.replicate(tuple(state.params))
+    key = state.key
     lls: List[float] = []
     ll_sweeps: List[int] = []
     times: List[float] = []
@@ -206,11 +247,12 @@ def _run_distributed(engine: LearningEngine, state: LearnerState,
         n = min(max(1, log_every), iters - done)
         chunk_lls = []
         t0 = time.perf_counter()
-        for i in range(n):
-            a_t = float(schedules_mod.trial_step(schedule, sched))
-            L1, L2 = step(L1, L2, sbatch, a_t)
-            sched = schedules_mod.advance(schedule, sched,
-                                          jnp.asarray(a_t), jnp.zeros((), jnp.int32))
+        for _ in range(n):
+            key, k_sel = jax.random.split(key)
+            a_t = schedules_mod.trial_step(schedule, sched)
+            L1, L2, a_acc, n_bt = sweep(L1, L2, sbatch.indices,
+                                        sbatch.mask, k_sel, a_t)
+            sched = schedules_mod.advance(schedule, sched, a_acc, n_bt)
             if engine.ll_mode == "sweep":
                 chunk_lls.append(ll_jit((L1, L2), batch))
         jax.block_until_ready((L1, L2))
@@ -228,8 +270,8 @@ def _run_distributed(engine: LearningEngine, state: LearnerState,
         else:
             last_ll = state.ll
         state = dataclasses.replace(
-            state, params=(L1, L2), sweep=state.sweep + n, sched=sched,
-            ll=last_ll)
+            state, params=(L1, L2), sweep=state.sweep + n, key=key,
+            sched=sched, ll=last_ll)
         if callback is not None:
             callback(state)
     return state, lls, ll_sweeps, times

@@ -27,6 +27,11 @@ service.py   ``SamplingService`` — micro-batching front-end (submit →
              coalesce → one vmapped device call → scatter) used via
              ``model.service()`` by the data pipeline and serving layers.
 
+Placement: every sampler and the service take ``runtime=`` (a
+``repro.dpp.runtime`` Runtime) — under ``Mesh`` the PRNG-key batch is
+sharded over the mesh's data axes with draws bit-for-bit equal to the
+single-device call on shared keys.
+
 The bare ``sample_*`` names re-exported here are deprecated shims; new
 code goes through ``repro.dpp`` (or ``repro.dpp.functional`` inside a jit
 trace). Subsystem-internal callers import from the submodules directly.

@@ -258,7 +258,7 @@ def _sample_batched(keys, lams, vecs, k_max, backend=None):
 
 def sample_krondpp_batched(key: jax.Array, spectrum: FactorSpectrum,
                            k_max: Optional[int] = None, num_samples: int = 1,
-                           backend: Optional[str] = None
+                           backend: Optional[str] = None, runtime=None
                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Draw ``num_samples`` exact KronDPP samples in one device call.
 
@@ -268,12 +268,26 @@ def sample_krondpp_batched(key: jax.Array, spectrum: FactorSpectrum,
     One compile per (k_max, num_samples) shape; repeat calls at the same
     shape reuse the executable. ``backend`` selects the phase-2 engine
     (None = auto: fused Pallas kernel on TPU, jax reference elsewhere).
+
+    ``runtime`` selects placement (``repro.dpp.runtime``): under a mesh
+    runtime the batch of PRNG keys is sharded over the data axes
+    (``runtime.map_keys``) and each shard runs this exact per-key
+    pipeline, so draws match the single-device call bit-for-bit on
+    shared keys.
     """
     if k_max is None:
         k_max = spectrum.suggested_k_max()
     keys = jax.random.split(key, num_samples)
-    return _sample_batched(keys, tuple(spectrum.lams), tuple(spectrum.vecs),
-                           int(k_max), backend)
+    lams, vecs = tuple(spectrum.lams), tuple(spectrum.vecs)
+    if runtime is not None and getattr(runtime, "is_mesh", False):
+        # spectra flow through operands (not closures) so the mesh can
+        # cache one compiled executable per (k_max, backend) + shape
+        return runtime.map_keys(
+            lambda ks, ops: _sample_batched(ks, ops[0], ops[1],
+                                            int(k_max), backend),
+            keys, operands=(lams, vecs),
+            static_key=("sample_krondpp_batched", int(k_max), backend))
+    return _sample_batched(keys, lams, vecs, int(k_max), backend)
 
 
 def picks_to_lists(picks):

@@ -112,7 +112,8 @@ def _sample_kdpp_batched(keys, lams, vecs, k, backend=None):
 
 def sample_kdpp_batched(key: jax.Array, spectrum: FactorSpectrum, k: int,
                         num_samples: int = 1,
-                        backend: Optional[str] = None) -> jax.Array:
+                        backend: Optional[str] = None,
+                        runtime=None) -> jax.Array:
     """``num_samples`` exact k-DPP samples in one device call.
 
     Returns (num_samples, k) int32 — every row has exactly k distinct
@@ -120,11 +121,19 @@ def sample_kdpp_batched(key: jax.Array, spectrum: FactorSpectrum, k: int,
     exactly rank distinct items with trailing -1 padding (never
     duplicates, never an empty degenerate row). Phase 2 for the whole batch
     is one ``kernels.ops.phase2_select`` call (fused Pallas kernel on TPU;
-    ``backend`` forces an engine).
+    ``backend`` forces an engine). Under a ``repro.dpp.runtime`` mesh
+    runtime the key batch is sharded over the data axes and draws match
+    the single-device call bit-for-bit on shared keys.
     """
     keys = jax.random.split(key, num_samples)
-    return _sample_kdpp_batched(keys, tuple(spectrum.lams),
-                                tuple(spectrum.vecs), int(k), backend)
+    lams, vecs = tuple(spectrum.lams), tuple(spectrum.vecs)
+    if runtime is not None and getattr(runtime, "is_mesh", False):
+        return runtime.map_keys(
+            lambda ks, ops: _sample_kdpp_batched(ks, ops[0], ops[1],
+                                                 int(k), backend),
+            keys, operands=(lams, vecs),
+            static_key=("sample_kdpp_batched", int(k), backend))
+    return _sample_kdpp_batched(keys, lams, vecs, int(k), backend)
 
 
 def sample_kdpp_dense(key: jax.Array, L: jax.Array, k: int) -> jax.Array:

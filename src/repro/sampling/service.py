@@ -72,16 +72,32 @@ class SamplingService:
     factor spectra come from a ``SpectralCache`` (shared across services
     by default), so constructing a second service over the same factor
     arrays does zero eigendecomposition work.
+
+    ``runtime`` (``repro.dpp.runtime``) picks the placement: ``Local()``
+    / None runs each flush as one vmapped device call; a ``Mesh`` runtime
+    shards every flush's key batch over the mesh's data axes, with
+    identical draws and identical ``ServiceStats`` (truncation counts are
+    aggregated over ALL shards).
     """
 
     def __init__(self, dpp, k_max: Optional[int] = None,
                  cache: Optional[SpectralCache] = None, seed: int = 0,
-                 max_batch: int = 1024):
+                 max_batch: int = 1024, runtime=None):
         self.cache = cache if cache is not None else default_cache()
+        if runtime is not None and getattr(runtime, "kind", "local") == "host":
+            raise ValueError("SamplingService is the batched device "
+                             "front-end; the host oracle has no service — "
+                             "use model.sample(runtime=Host()) directly")
+        self.runtime = runtime
         if isinstance(dpp, KronDPP):
             self.spectrum = self.cache.spectrum(dpp)
         elif hasattr(dpp, "spectrum"):       # facade DPPModel
-            self.spectrum = dpp.spectrum(self.cache)
+            import inspect
+            params = inspect.signature(dpp.spectrum).parameters
+            if "runtime" in params:          # facade models pre-place
+                self.spectrum = dpp.spectrum(self.cache, runtime=runtime)
+            else:                            # duck-typed spectrum(cache)
+                self.spectrum = dpp.spectrum(self.cache)
         else:
             raise TypeError(
                 f"SamplingService wants a repro.dpp model or core.KronDPP, "
@@ -115,7 +131,8 @@ class SamplingService:
         while len(drawn) < num_samples:
             batch = min(remaining, self.max_batch)
             self._key, sub = jax.random.split(self._key)
-            picks = sample_kdpp_batched(sub, self.spectrum, k, batch)
+            picks = sample_kdpp_batched(sub, self.spectrum, k, batch,
+                                        runtime=self.runtime)
             self.stats.device_calls += 1
             self.stats.samples_drawn += batch
             drawn.extend(picks_to_lists(picks))
@@ -150,10 +167,14 @@ class SamplingService:
         while len(drawn) < total:
             batch = min(remaining, self.max_batch)
             self._key, sub = jax.random.split(self._key)
-            picks, _, truncated = sample_krondpp_batched(sub, self.spectrum,
-                                                         self.k_max, batch)
+            picks, _, truncated = sample_krondpp_batched(
+                sub, self.spectrum, self.k_max, batch, runtime=self.runtime)
             self.stats.device_calls += 1
             self.stats.samples_drawn += batch
+            # under a mesh runtime `truncated` is the GLOBAL (all-shard)
+            # row vector with shard padding already sliced off, so this
+            # sum aggregates every shard's clipped draws — never shard-0's
+            # slice, never phantom counts from pad rows
             self.stats.truncations += int(truncated.sum())
             drawn.extend(picks_to_lists(picks))
             remaining -= batch

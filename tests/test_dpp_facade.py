@@ -93,14 +93,14 @@ def test_kdpp_sample_exactly_k(model):
     assert all(len(set(row.tolist())) == 2 for row in idx)
 
 
-def test_host_backend_matches_device_size_distribution(model):
-    host = model.sample(jax.random.PRNGKey(2), 400, backend="host")
+def test_host_runtime_matches_device_size_distribution(model):
+    host = model.sample(jax.random.PRNGKey(2), 400, runtime=dpp.Host())
     dev = model.sample(jax.random.PRNGKey(3), 400)
     h = np.bincount(np.asarray(host.sizes()), minlength=N + 1) / 400
     d = np.bincount(np.asarray(dev.sizes()), minlength=N + 1)[:N + 1] / 400
     assert np.abs(h - d).max() < 0.12
     with pytest.raises(ValueError):
-        model.sample(jax.random.PRNGKey(0), 1, k=2, backend="host")
+        model.sample(jax.random.PRNGKey(0), 1, k=2, runtime=dpp.Host())
 
 
 def test_marginal_matches_bruteforce(model, oracle):
