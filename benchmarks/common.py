@@ -1,16 +1,26 @@
-"""Shared benchmark helpers: synthetic data per the paper's protocols."""
+"""Shared benchmark helpers: synthetic data per the paper's protocols,
+plus the report schema (version + config fingerprint) and the tracker
+emission hook every benchmark's metrics flow through."""
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import time
-from typing import List
+from typing import List, Optional
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import KronDPP, SubsetBatch, random_krondpp, sample_krondpp
+
+#: bump when the report shape changes incompatibly; the regression gate
+#: (benchmarks/regression.py) refuses to compare mismatched versions
+SCHEMA_VERSION = 2
+
+REPORTS_DIR = os.path.join(os.path.dirname(__file__), "reports")
 
 
 def rescale_expected_size(dpp: KronDPP, target: float) -> KronDPP:
@@ -20,16 +30,56 @@ def rescale_expected_size(dpp: KronDPP, target: float) -> KronDPP:
     return _rescale(dpp, target)
 
 
-def json_report(name: str, payload: dict) -> str:
+def config_fingerprint(config: dict) -> str:
+    """Stable short hash of a benchmark's config (its workload parameters
+    plus the jax platform). Two reports are throughput-comparable only
+    when their fingerprints match — the regression gate checks this
+    before comparing numbers, so a silently changed workload can never
+    masquerade as a perf regression (or a win)."""
+    blob = json.dumps(config, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def report_meta(config: Optional[dict] = None) -> dict:
+    """The stamp every report carries: schema version, the fingerprinted
+    config (workload parameters + platform), and the environment."""
+    cfg = dict(config or {})
+    cfg.setdefault("platform", jax.default_backend())
+    return {"schema_version": SCHEMA_VERSION,
+            "config_fingerprint": config_fingerprint(cfg),
+            "config": cfg}
+
+
+def json_report(name: str, payload: dict, config: Optional[dict] = None) -> str:
     """One JSON line per benchmark result, machine-readable for CI trend
-    tracking. Also appended to $BENCH_JSON (jsonl) when set."""
-    line = json.dumps({"bench": name, **payload}, sort_keys=True)
+    tracking — stamped with the schema version + config fingerprint, and
+    emitted as a ``benchmark.report`` event through the configured
+    ``repro.obs`` tracker (so a JSONL run log captures every benchmark's
+    metrics alongside the service/learning/cache streams). Also appended
+    to $BENCH_JSON (jsonl) when set."""
+    full = {**report_meta(config), "bench": name, **payload}
+    line = json.dumps(full, sort_keys=True, default=str)
     print(line)
+    obs.current_tracker().event("benchmark.report", **full)
     path = os.environ.get("BENCH_JSON")
     if path:
         with open(path, "a") as f:
             f.write(line + "\n")
     return line
+
+
+def write_report(name: str, payload: dict,
+                 config: Optional[dict] = None) -> str:
+    """Write ``benchmarks/reports/<name>.json`` — the committed artifact
+    the regression gate compares fresh runs against — with the same
+    schema stamp as ``json_report``. Returns the path."""
+    os.makedirs(REPORTS_DIR, exist_ok=True)
+    path = os.path.join(REPORTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump({**report_meta(config), "bench": name, **payload}, f,
+                  indent=1, sort_keys=True, default=str)
+        f.write("\n")
+    return path
 
 
 def paper_synthetic_data(key, sizes, n_subsets, size_lo, size_hi, seed=0

@@ -16,8 +16,6 @@ tracking (acceptance: >= 3x at minibatch <= 64 on CPU).
 
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import jax
@@ -26,15 +24,19 @@ import numpy as np
 from repro.core import KronDPP, random_krondpp
 from repro.core.krk_picard import krk_picard_step
 from repro.learning import LearningEngine, select_minibatch
-from .common import gaussian_kernel_data, json_report
+from .common import gaussian_kernel_data, json_report, write_report
 
 SIZES = (32, 32)               # N = 1024
 NS = (64, 256, 1024)           # dataset sizes (number of subsets)
 MINIBATCH = 64                 # acceptance regime: minibatch <= 64
 ITERS = 30
 LOG_EVERY = 10
-REPORT_PATH = os.path.join(os.path.dirname(__file__), "reports",
-                           "paper_fig1_engine.json")
+
+
+def report_config() -> dict:
+    """Fingerprinted workload parameters (see common.report_meta)."""
+    return {"sizes": list(SIZES), "ns": list(NS), "minibatch": MINIBATCH,
+            "iters": ITERS, "log_every": LOG_EVERY}
 
 
 def _host_loop(init, batch, mb, iters, seed, a=1.0):
@@ -114,12 +116,8 @@ def main():
               f"{r['host_sweeps_per_s']:.1f}; {r['speedup']:.1f}x, "
               f"ll_dev={r['ll_max_abs_dev']:.2e} "
               f"(fp32 match={r['ll_match_fp32']})")
-    json_report("paper_fig1_engine", res)
-    os.makedirs(os.path.dirname(REPORT_PATH), exist_ok=True)
-    with open(REPORT_PATH, "w") as f:
-        json.dump({"bench": "paper_fig1_engine", **res}, f, indent=1,
-                  sort_keys=True)
-        f.write("\n")
+    json_report("paper_fig1_engine", res, config=report_config())
+    write_report("paper_fig1_engine", res, config=report_config())
 
 
 if __name__ == "__main__":

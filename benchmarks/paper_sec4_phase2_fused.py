@@ -24,13 +24,19 @@ import numpy as np
 from repro.core import random_krondpp
 from repro.sampling import SpectralCache
 from repro.sampling.batched import sample_krondpp_batched
-from .common import json_report, rescale_expected_size, timed
+from .common import json_report, rescale_expected_size, timed, write_report
 
 SIZES = (32, 32)          # N = 1024, the m=2 O(N^{3/2}) regime
 TARGET_E = 12.0
 BATCHES = (1, 8, 32)
 REPEATS = {1: 50, 8: 10, 32: 4}
 TRIALS = 5                # interleaved A/B trials; best-of to shed drift
+
+
+def report_config() -> dict:
+    """Fingerprinted workload parameters (see common.report_meta)."""
+    return {"sizes": list(SIZES), "E_size": TARGET_E,
+            "batches": list(BATCHES)}
 
 
 def run(seed: int = 0) -> dict:
@@ -89,7 +95,8 @@ def main():
               f"{r['fused_interpret_us']:.0f},"
               f"{r['fused_speedup']:.2f}x vs while_loop "
               f"({r['while_loop_us']:.0f}us, {res['fused_mode']} mode)")
-    json_report("paper_sec4_phase2_fused", res)
+    json_report("paper_sec4_phase2_fused", res, config=report_config())
+    write_report("paper_sec4_phase2_fused", res, config=report_config())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,240 @@
+"""Benchmark regression gate: fresh run vs the committed JSON reports.
+
+The reports under ``benchmarks/reports/`` stop being write-only
+artifacts here: this module re-runs each report-backed benchmark, lines
+its throughput metrics up against the committed numbers, and **fails
+(exit 2) when any metric regresses by more than the threshold**
+(default 25%) — so the raw-speed wins of PRs 4–5 become a ratchet
+instead of a memory. CI runs it on a fixed small config (see the
+``regression`` job in .github/workflows/ci.yml).
+
+Reports are schema-stamped by ``benchmarks.common`` (``schema_version``
++ ``config_fingerprint``); the gate refuses to compare reports whose
+fingerprints differ — a changed workload must re-commit its report
+(run ``python -m benchmarks.<bench>``), not silently shift the baseline.
+
+Noise discipline: scheduler interference is one-sided (it only ever
+makes a run slower), so each benchmark is measured ``--fresh-runs``
+times (default 2) and the gate holds the per-metric BEST against the
+committed number — a real regression slows every run; a throttling
+episode does not.
+
+Usage:
+    python -m benchmarks.regression                      # all gated benches
+    python -m benchmarks.regression --benches facade_api # subset
+    python -m benchmarks.regression --threshold 0.4      # looser gate
+    python -m benchmarks.regression --fresh-runs 3       # noisier machine
+    python -m benchmarks.regression --compare committed.json fresh.json
+    python -m benchmarks.regression --jsonl run_log.jsonl  # obs run log
+
+The committed reports are read BEFORE the fresh run (benchmark mains
+rewrite them in place), and the fresh run goes through each module's
+``run()`` — never its ``main()`` — so the gate never overwrites the
+baseline it is comparing against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+from .common import REPORTS_DIR, SCHEMA_VERSION
+
+#: metric extractors per gated benchmark: row-key field, then
+#: (metric, higher_is_better) pairs read from every row
+GATED = {
+    "facade_api": {
+        "row_key": "N",
+        "metrics": (("kron_sample_us", False), ("dense_sample_us", False),
+                    ("kron_log_prob_us", False)),
+    },
+    "paper_fig1_engine": {
+        "row_key": "n",
+        "metrics": (("engine_sweeps_per_s", True),),
+    },
+    "paper_sec4_phase2_fused": {
+        "row_key": "batch",
+        "metrics": (("while_loop_us", False), ("fused_interpret_us", False)),
+    },
+    "runtime_scaling": {
+        "row_key": "workload",
+        "metrics": (("local_per_sec", True), ("mesh_per_sec", True)),
+    },
+}
+
+
+def extract_metrics(bench: str, report: dict) -> Dict[str, Tuple[float, bool]]:
+    """-> {"rowkey/metric": (value, higher_is_better)} for a report."""
+    spec = GATED[bench]
+    out: Dict[str, Tuple[float, bool]] = {}
+    for row in report.get("rows", ()):
+        key = row.get(spec["row_key"])
+        for metric, higher in spec["metrics"]:
+            if metric in row:
+                out[f"{spec['row_key']}={key}/{metric}"] = (
+                    float(row[metric]), higher)
+    return out
+
+
+def merge_best(bench: str, reports: List[dict]) -> Dict[str, Tuple[float, bool]]:
+    """Per-metric best across several fresh runs — max for throughput,
+    min for latency. Scheduler noise only ever makes a run slower, so
+    the best of k fresh runs is the honest number to hold against a
+    committed baseline (which was itself the best the machine produced
+    when it was committed)."""
+    merged: Dict[str, Tuple[float, bool]] = {}
+    for rep in reports:
+        for label, (v, higher) in extract_metrics(bench, rep).items():
+            if label in merged:
+                v = (max if higher else min)(merged[label][0], v)
+            merged[label] = (v, higher)
+    return merged
+
+
+def compare_reports(bench: str, committed: dict, fresh,
+                    threshold: float = 0.25,
+                    check_fingerprint: bool = True) -> List[str]:
+    """-> list of human-readable regression strings (empty == gate holds).
+
+    ``fresh`` is one report dict or a list of them (several fresh runs;
+    per-metric best is compared — see ``merge_best``). A higher-is-better
+    metric regresses when fresh < committed*(1-thr); a lower-is-better
+    (latency) metric when fresh > committed*(1+thr). Metrics present in
+    only one report are skipped (schema drift is the fingerprint check's
+    job, not a spurious perf failure).
+    """
+    freshes = list(fresh) if isinstance(fresh, (list, tuple)) else [fresh]
+    problems: List[str] = []
+    if check_fingerprint:
+        cv = committed.get("schema_version")
+        if cv != SCHEMA_VERSION:
+            problems.append(
+                f"{bench}: committed report schema_version={cv!r} != "
+                f"{SCHEMA_VERSION} — re-commit it "
+                f"(python -m benchmarks.{bench})")
+            return problems
+        cf = committed.get("config_fingerprint")
+        for f in freshes:
+            ff = f.get("config_fingerprint")
+            if cf != ff:
+                problems.append(
+                    f"{bench}: config fingerprint mismatch (committed "
+                    f"{cf!r} vs fresh {ff!r}) — the workload or platform "
+                    f"changed; re-commit the report instead of comparing "
+                    f"throughput across different configs")
+                return problems
+    want = extract_metrics(bench, committed)
+    got = merge_best(bench, freshes)
+    for label, (base, higher) in sorted(want.items()):
+        if label not in got:
+            continue
+        new = got[label][0]
+        if base <= 0:
+            continue
+        if higher:
+            regressed = new < base * (1.0 - threshold)
+            rel = 1.0 - new / base
+        else:
+            regressed = new > base * (1.0 + threshold)
+            rel = new / base - 1.0
+        if regressed:
+            problems.append(
+                f"{bench}/{label}: {'-' if higher else '+'}{rel:.0%} "
+                f"(committed {base:.4g} -> fresh {new:.4g}, "
+                f"threshold {threshold:.0%})")
+    return problems
+
+
+def _load_committed(bench: str) -> dict:
+    path = os.path.join(REPORTS_DIR, f"{bench}.json")
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"no committed report for {bench} at {path}; run "
+            f"python -m benchmarks.{bench} and commit the result")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fresh_run(bench: str) -> dict:
+    """One fresh measurement via the module's run() — stamped exactly like
+    the committed report so fingerprints are comparable."""
+    from .common import report_meta
+    mod = importlib.import_module(f".{bench}", package=__package__)
+    payload = mod.run()
+    config = getattr(mod, "report_config", lambda: {})()
+    return {**report_meta(config), "bench": bench, **payload}
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        description="Fail when fresh benchmark throughput regresses vs the "
+                    "committed reports.")
+    parser.add_argument("--benches", nargs="*", default=sorted(GATED),
+                        choices=sorted(GATED), metavar="BENCH",
+                        help=f"gated benchmarks (default: all of "
+                             f"{sorted(GATED)})")
+    parser.add_argument("--threshold", type=float, default=0.25,
+                        help="relative throughput drop that fails the gate "
+                             "(default 0.25)")
+    parser.add_argument("--fresh-runs", type=int, default=2, metavar="K",
+                        help="fresh measurements per benchmark; the gate "
+                             "compares the per-metric best of the K runs "
+                             "(noise is one-sided — default 2)")
+    parser.add_argument("--compare", nargs=2, default=None,
+                        metavar=("COMMITTED", "FRESH"),
+                        help="compare two report JSON files directly "
+                             "instead of running benchmarks (bench name "
+                             "read from the files)")
+    parser.add_argument("--no-fingerprint", action="store_true",
+                        help="skip the schema/config fingerprint check "
+                             "(compare raw numbers only)")
+    parser.add_argument("--jsonl", default=None, metavar="PATH",
+                        help="append tracker emissions of the fresh run "
+                             "to PATH (repro.obs JSONL run log)")
+    args = parser.parse_args(argv)
+
+    if args.jsonl:
+        from repro import obs
+        obs.configure(obs.current_tracker(), jsonl=args.jsonl)
+
+    problems: List[str] = []
+    if args.compare:
+        with open(args.compare[0]) as f:
+            committed = json.load(f)
+        with open(args.compare[1]) as f:
+            fresh = json.load(f)
+        bench = committed.get("bench") or fresh.get("bench")
+        if bench not in GATED:
+            print(f"regression: bench {bench!r} is not gated "
+                  f"(gated: {sorted(GATED)})", file=sys.stderr)
+            return 2
+        problems += compare_reports(bench, committed, fresh, args.threshold,
+                                    check_fingerprint=not args.no_fingerprint)
+    else:
+        for bench in args.benches:
+            committed = _load_committed(bench)
+            print(f"regression: running {bench} fresh "
+                  f"(x{max(1, args.fresh_runs)}) ...")
+            fresh = [_fresh_run(bench)
+                     for _ in range(max(1, args.fresh_runs))]
+            found = compare_reports(bench, committed, fresh, args.threshold,
+                                    check_fingerprint=not args.no_fingerprint)
+            problems += found
+            print(f"regression: {bench}: "
+                  f"{'OK' if not found else f'{len(found)} regression(s)'}")
+
+    if problems:
+        print("regression gate FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 2
+    print("regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

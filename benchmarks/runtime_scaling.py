@@ -104,10 +104,17 @@ def run() -> dict:
     raise RuntimeError(f"no {_MARKER} line in subprocess output")
 
 
+def report_config() -> dict:
+    """Fingerprinted workload parameters (see common.report_meta)."""
+    return {"sizes": [16, 16], "E_size": 12.0, "batches": [256, 1024],
+            "fit_n": 256, "fit_iters": 6}
+
+
 def main() -> None:
-    from .common import json_report
+    from .common import json_report, write_report
     res = run()
-    json_report("runtime_scaling", res)
+    json_report("runtime_scaling", res, config=report_config())
+    write_report("runtime_scaling", res, config=report_config())
     for row in res["rows"]:
         print(f"runtime_scaling/{row['workload']},"
               f"{row['mesh_per_sec']},x{row['mesh_over_local']}")

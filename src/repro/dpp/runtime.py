@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import obs
 from ..core.distributed import shard_map_compat
 
 
@@ -254,18 +255,30 @@ class Mesh(Runtime):
         if pad:
             keys = keys[jnp.arange(n + pad) % n]
         spec = P(self.data_axes)
+        tracker = obs.current_tracker()
         if static_key is not None:
             mapped = self._mapped_cache.get(static_key)
             if mapped is None:
+                tracker.counter("runtime.mesh.exec_cache_misses")
                 mapped = jax.jit(self.shard_map(
                     fn, in_specs=(spec, P()), out_specs=spec))
                 self._mapped_cache[static_key] = mapped
+            else:
+                tracker.counter("runtime.mesh.exec_cache_hits")
         else:
             mapped = self.shard_map(fn, in_specs=(spec, P()),
                                     out_specs=spec)
         out = mapped(keys, operands)
         if pad:
             out = jax.tree_util.tree_map(lambda x: x[:n], out)
+        # emitted AFTER the pad slice, so per-shard row stats downstream
+        # consumers derive (e.g. ServiceStats.truncations) and the counts
+        # here agree on what a "row" is: real keys only, all shards
+        if obs.enabled(tracker):
+            tracker.counter("runtime.mesh.map_keys_calls")
+            tracker.counter("runtime.mesh.keys", n)
+            tracker.counter("runtime.mesh.pad_rows", pad)
+            tracker.gauge("runtime.mesh.data_shards", shards)
         return out
 
 

@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from . import ref
 from .kron_matvec import kron_matvec_pallas
 from .partial_trace import partial_trace_A_pallas, partial_trace_C_pallas
@@ -24,6 +25,18 @@ _VMEM_BUDGET = 12 * 2 ** 20  # bytes we allow a single kernel tile set to claim
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _count_dispatch(op: str, engine: str) -> None:
+    """Emit a ``kernels.<op>.<engine>`` counter at each dispatch decision.
+
+    These wrappers usually run INSIDE a jit trace, so the counter fires
+    once per compiled specialization (the decision point), not once per
+    executed call — exactly what "which engine did this program compile
+    against" wants, and a no-op side-effect-free call under the default
+    ``NullTracker``. Only static config crosses the tracker boundary
+    (never tracer values)."""
+    obs.current_tracker().counter(f"kernels.{op}.{engine}")
 
 
 def _round_up(x: int, m: int) -> int:
@@ -40,6 +53,7 @@ def kron_matvec(A: jax.Array, B: jax.Array, X: jax.Array,
     N1, N2 = A.shape[0], B.shape[0]
     batch = X.shape[0]
     use_pallas = _on_tpu() or force_pallas
+    _count_dispatch("kron_matvec", "pallas" if use_pallas else "reference")
     if not use_pallas:
         return ref.kron_matvec_ref(A, B, X)
     align = 128 if _on_tpu() else 1
@@ -128,6 +142,7 @@ def phase2_select(us, Gs, sizes, k_eff, backend=None, block_n1=0):
     k_eff = jnp.asarray(k_eff, jnp.int32)
     batched = us.ndim == 2
     if backend == "reference":
+        _count_dispatch("phase2_select", "reference")
         from ..sampling.batched import phase2_select_reference
         if not batched:
             return phase2_select_reference(us, Gs, sizes, k_eff)
@@ -143,6 +158,7 @@ def phase2_select(us, Gs, sizes, k_eff, backend=None, block_n1=0):
             f"N1*Nr={Gs[0].shape[-2]}*{Nr}, Gr fold, basis) inside the "
             f"{_VMEM_BUDGET >> 20}MiB VMEM budget; use "
             f"backend='reference' for this shape")
+    _count_dispatch("phase2_select", "pallas")
     if not batched:
         Gs = tuple(G[None] for G in Gs)
         us, k_eff = us[None], k_eff[None]
@@ -160,7 +176,9 @@ def partial_trace_A(theta: jax.Array, L2: jax.Array, N1: int, N2: int,
                     force_pallas: bool = False) -> jax.Array:
     theta4 = theta.reshape(N1, N2, N1, N2)
     if not (_on_tpu() or force_pallas):
+        _count_dispatch("partial_trace_A", "reference")
         return ref.partial_trace_A_ref(theta4, L2)
+    _count_dispatch("partial_trace_A", "pallas")
     bk = bl = 1
     while bk < N1 and N1 % (bk * 2) == 0 and (2 * bk) * bl * N2 * N2 * 4 <= _VMEM_BUDGET:
         bk *= 2
@@ -174,7 +192,9 @@ def partial_trace_C(theta: jax.Array, L1: jax.Array, N1: int, N2: int,
                     force_pallas: bool = False) -> jax.Array:
     theta4 = theta.reshape(N1, N2, N1, N2)
     if not (_on_tpu() or force_pallas):
+        _count_dispatch("partial_trace_C", "reference")
         return ref.partial_trace_C_ref(theta4, L1)
+    _count_dispatch("partial_trace_C", "pallas")
     bu = bv = 1
     while bu < N2 and N2 % (bu * 2) == 0 and (2 * bu) * bv * N1 * N1 * 4 <= _VMEM_BUDGET:
         bu *= 2
@@ -190,7 +210,9 @@ def partial_trace_C(theta: jax.Array, L1: jax.Array, N1: int, N2: int,
 
 def greedy_map_update(lcol, C, cj, dj, d, force_pallas: bool = False):
     if not (_on_tpu() or force_pallas):
+        _count_dispatch("greedy_map_update", "reference")
         return ref.greedy_map_update_ref(lcol, C, cj, dj, d)
+    _count_dispatch("greedy_map_update", "pallas")
     N = d.shape[0]
     bn = min(512, N)
     while N % bn != 0:

@@ -27,11 +27,13 @@ from typing import Any, List, Optional
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..checkpoint import CheckpointConfig, CheckpointManager
 from ..core.dpp import SubsetBatch
 from ..core.krondpp import KronDPP
 from . import schedules as schedules_mod
-from .engine import ALGORITHMS, LearnerState, LearningEngine
+from .engine import (ALGORITHMS, LearnerState, LearningEngine,
+                     emit_sweep_metrics)
 from .objective import log_likelihood_factored
 
 
@@ -189,11 +191,19 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
         manager.wait()
 
     total_t = sum(times)
+    sweeps_per_sec = (remaining / total_t) if total_t > 0 else float("inf")
+    tracker = obs.current_tracker()
+    if obs.enabled(tracker):
+        tracker.event(
+            "learning.fit", algorithm=algorithm, runtime=rt.kind,
+            sweeps=int(state.sweep), iters=iters,
+            sweeps_per_sec=sweeps_per_sec,
+            log_likelihood=(lls[-1] if lls else None),
+            backtracks=int(state.sched.backtracks))
     return FitReport(
         model=_to_model(state.params, algorithm), state=state,
         log_likelihoods=lls, ll_sweeps=ll_sweeps, sweep_times=times,
-        sweeps=int(state.sweep),
-        sweeps_per_sec=(remaining / total_t) if total_t > 0 else float("inf"))
+        sweeps=int(state.sweep), sweeps_per_sec=sweeps_per_sec)
 
 
 def _run_mesh(engine: LearningEngine, state: LearnerState,
@@ -243,6 +253,9 @@ def _run_mesh(engine: LearningEngine, state: LearnerState,
     start = int(state.sweep)
     sched = state.sched
     ll_jit = jax.jit(log_likelihood_factored)
+    tracker = obs.current_tracker()
+    track = obs.enabled(tracker)
+    prev_bt = int(state.sched.backtracks) if track else 0
     while done < iters:
         n = min(max(1, log_every), iters - done)
         chunk_lls = []
@@ -272,6 +285,14 @@ def _run_mesh(engine: LearningEngine, state: LearnerState,
         state = dataclasses.replace(
             state, params=(L1, L2), sweep=state.sweep + n, key=key,
             sched=sched, ll=last_ll)
+        if track:
+            new_lls = lls[len(lls) - n:] if engine.ll_mode == "sweep" \
+                else lls[-1:] if engine.ll_mode == "chunk" else []
+            prev_bt = emit_sweep_metrics(
+                tracker, algorithm=algorithm, runtime="mesh",
+                seconds=times[-1], sweeps=n, state=state,
+                prev_backtracks=prev_bt, lls=new_lls,
+                first_sweep=start + done - len(new_lls) + 1)
         if callback is not None:
             callback(state)
     return state, lls, ll_sweeps, times

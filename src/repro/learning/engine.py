@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.dpp import SubsetBatch
 from ..core.em import e_step, eigvec_ascent, m_step_eigvals
 from ..core.joint_picard import joint_picard_step
@@ -42,6 +43,27 @@ from . import schedules
 from .objective import log_likelihood_eig, log_likelihood_factored
 
 ALGORITHMS = ("krk", "krk-stochastic", "em", "joint")
+
+
+def emit_sweep_metrics(tracker, *, algorithm: str, runtime: str,
+                       seconds: float, sweeps: int, state: "LearnerState",
+                       prev_backtracks: int, lls=(), first_sweep: int = 0
+                       ) -> int:
+    """Emit one compiled chunk's ``learning.*`` metrics (shared by the
+    Local engine loop and the api.py mesh driver, so both placements
+    produce the same stream): chunk wall time, sweep counter, Armijo
+    backtrack delta, accepted step size, and the tracked per-sweep
+    log-likelihoods. Returns the new cumulative backtrack count."""
+    bt = int(state.sched.backtracks)
+    tracker.observe("learning.chunk_s", seconds, algorithm=algorithm,
+                    runtime=runtime, sweeps=sweeps)
+    tracker.counter("learning.sweeps", sweeps)
+    tracker.counter("learning.backtracks", bt - prev_backtracks)
+    tracker.gauge("learning.step_size", float(state.sched.a))
+    for i, ll in enumerate(lls):
+        tracker.gauge("learning.log_likelihood", float(ll),
+                      sweep=first_sweep + i)
+    return bt
 
 
 @jax.tree_util.register_pytree_node_class
@@ -236,6 +258,12 @@ class LearningEngine:
         log-likelihood after sweep ``ll_sweeps[i]`` (absolute, i.e. offset
         by any resumed progress); ``chunk_times`` are host-visible seconds
         per compiled chunk call.
+
+        When a tracker is configured (``repro.obs``), each chunk also
+        emits ``learning.*`` metrics — chunk wall time, sweeps, per-sweep
+        log-likelihood, Armijo backtrack counts, accepted step size
+        (``emit_sweep_metrics``). With the default ``NullTracker`` the
+        loop is emission-free.
         """
         log_every = max(1, int(log_every))
         lls: List[float] = []
@@ -243,6 +271,9 @@ class LearningEngine:
         times: List[float] = []
         start = int(state.sweep)
         done = 0
+        tracker = obs.current_tracker()
+        track = obs.enabled(tracker)
+        prev_bt = int(state.sched.backtracks) if track else 0
         while done < iters:
             n = min(log_every, iters - done)
             t0 = time.perf_counter()
@@ -250,12 +281,21 @@ class LearningEngine:
             jax.block_until_ready(state.params)
             times.append(time.perf_counter() - t0)
             done += n
+            chunk_track_lls: List[float] = []
             if self.ll_mode == "sweep":
-                lls.extend(float(x) for x in np.asarray(chunk_lls))
+                chunk_track_lls = [float(x) for x in np.asarray(chunk_lls)]
+                lls.extend(chunk_track_lls)
                 ll_sweeps.extend(range(start + done - n + 1, start + done + 1))
             elif self.ll_mode == "chunk":
-                lls.append(float(state.ll))
+                chunk_track_lls = [float(state.ll)]
+                lls.append(chunk_track_lls[0])
                 ll_sweeps.append(start + done)
+            if track:
+                prev_bt = emit_sweep_metrics(
+                    tracker, algorithm=self.algorithm, runtime="local",
+                    seconds=times[-1], sweeps=n, state=state,
+                    prev_backtracks=prev_bt, lls=chunk_track_lls,
+                    first_sweep=start + done - len(chunk_track_lls) + 1)
             if callback is not None:
                 callback(state)
         return state, lls, ll_sweeps, times

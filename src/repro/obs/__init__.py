@@ -1,0 +1,35 @@
+"""repro.obs — the unified metrics/tracing layer.
+
+One emission protocol (``Tracker``: counters, gauges, timer histograms,
+events, ``scope`` context tags) with pluggable sinks, and one
+process-wide seam (``configure()`` / ``current_tracker()``) that every
+instrumented subsystem — ``SamplingService``, ``SpectralCache``,
+``LearningEngine``/``learning.fit``, the ``kernels.ops`` dispatch, the
+``Mesh`` runtime — emits through.
+
+The default sink is the zero-overhead ``NullTracker``: uninstrumented
+behavior and throughput are bit-identical to not having this package
+(pinned by ``tests/test_obs.py``). Turning observability on is one line:
+
+    from repro import obs
+    obs.configure(jsonl="run_log.jsonl")        # append-only run log
+    # or, for programmatic inspection:
+    t = obs.InMemoryTracker()
+    obs.configure(t)
+    ...
+    print(t.snapshot())
+
+See the README "Observability" section for the metric namespaces
+(``service.*``, ``spectral_cache.*``, ``learning.*``, ``kernels.*``,
+``runtime.mesh.*``), reading a JSONL run log, capturing a profiler trace
+(``python -m benchmarks.run --profile``), and the benchmark regression
+gate (``python -m benchmarks.regression``).
+"""
+
+from .tracker import (InMemoryTracker, JsonlTracker, NullTracker, TeeTracker,
+                      Tracker, configure, current_tracker, enabled, tee, use)
+
+__all__ = [
+    "Tracker", "NullTracker", "InMemoryTracker", "JsonlTracker",
+    "TeeTracker", "configure", "current_tracker", "enabled", "tee", "use",
+]

@@ -19,11 +19,12 @@ every sample exactly (the property the resumable data pipeline relies on).
 
 from __future__ import annotations
 
-import dataclasses
+import time
 from typing import List, Optional
 
 import jax
 
+from .. import obs
 from ..core.krondpp import KronDPP
 from .batched import picks_to_lists, sample_krondpp_batched
 from .kdpp import sample_kdpp_batched
@@ -37,6 +38,7 @@ class SampleTicket:
         self._service = service
         self.num_samples = num_samples
         self._result: Optional[List[List[int]]] = None
+        self._submitted = time.perf_counter()   # queue-wait measurement
 
     def done(self) -> bool:
         return self._result is not None
@@ -51,17 +53,73 @@ class SampleTicket:
         return self._result
 
 
-@dataclasses.dataclass
 class ServiceStats:
-    device_calls: int = 0
-    samples_drawn: int = 0
-    samples_requested: int = 0
-    flushes: int = 0
-    #: draws whose |J| overflowed the static k_max budget and were clipped
-    #: to the lowest eigen-indices — a many-sigma event per draw at the
-    #: default E|Y| + 6σ budget, so a rising counter means k_max is
-    #: undersized for this kernel
-    truncations: int = 0
+    """Per-service counters, as a live VIEW over the service's tracker.
+
+    Every count is accumulated by emitting ``service.<key>`` counters
+    through the service's per-instance ``obs.InMemoryTracker`` (teed with
+    the process-wide ``obs.current_tracker()``), so the numbers here and
+    the numbers in a configured run log are the same stream by
+    construction.
+
+    Both spellings of the pre-obs contracts keep working — attribute
+    access (``stats.truncations``), and the ``SpectralCache``-style
+    ``stats()`` call returning a plain dict with the same snake_case key
+    style as ``cache.stats()``. Equality compares counter snapshots (the
+    Mesh == Local equivalence suite relies on it).
+
+    ``truncations`` counts draws whose |J| overflowed the static k_max
+    budget and were clipped to the lowest eigen-indices — a many-sigma
+    event per draw at the default E|Y| + 6σ budget, so a rising counter
+    means k_max is undersized for this kernel.
+    """
+
+    KEYS = ("device_calls", "samples_drawn", "samples_requested",
+            "flushes", "truncations")
+
+    def __init__(self, metrics: Optional[obs.InMemoryTracker] = None, **counts):
+        if metrics is None:             # detached snapshot (legacy ctor)
+            metrics = obs.InMemoryTracker()
+            for k, v in counts.items():
+                if k not in self.KEYS:
+                    raise TypeError(f"unknown ServiceStats field {k!r}")
+                metrics.counter(f"service.{k}", v)
+        elif counts:
+            raise TypeError("pass either a metrics tracker or counts, "
+                            "not both")
+        self._metrics = metrics
+
+    def _value(self, key: str) -> int:
+        return int(self._metrics.counter_value(f"service.{key}"))
+
+    def __call__(self) -> dict:
+        """Plain-dict snapshot — the same shape as ``cache.stats()``."""
+        return {k: self._value(k) for k in self.KEYS}
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self.KEYS:
+            raise KeyError(key)
+        return self._value(key)
+
+    def keys(self):
+        return self.KEYS
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, ServiceStats):
+            return self() == other()
+        if isinstance(other, dict):
+            return self() == other
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{k}={v}" for k, v in self().items())
+        return f"ServiceStats({body})"
+
+
+for _key in ServiceStats.KEYS:
+    setattr(ServiceStats, _key,
+            property(lambda self, k=_key: self._value(k)))
+del _key
 
 
 class SamplingService:
@@ -78,11 +136,20 @@ class SamplingService:
     shards every flush's key batch over the mesh's data axes, with
     identical draws and identical ``ServiceStats`` (truncation counts are
     aggregated over ALL shards).
+
+    Observability (``repro.obs``): every flush emits ``service.*``
+    metrics — the ``ServiceStats`` counters plus ``service.queue_wait_s``
+    (submit -> flush latency per ticket), ``service.flush_s`` /
+    ``service.device_call_s`` timer samples, ``service.batch_occupancy``
+    (requested rows / padded batch rows) and ``service.truncation_rate``
+    — through a per-service ``InMemoryTracker`` teed with the
+    process-wide ``obs.current_tracker()`` (or an explicit ``tracker=``).
+    ``stats`` is a live view over those counters.
     """
 
     def __init__(self, dpp, k_max: Optional[int] = None,
                  cache: Optional[SpectralCache] = None, seed: int = 0,
-                 max_batch: int = 1024, runtime=None):
+                 max_batch: int = 1024, runtime=None, tracker=None):
         self.cache = cache if cache is not None else default_cache()
         if runtime is not None and getattr(runtime, "kind", "local") == "host":
             raise ValueError("SamplingService is the batched device "
@@ -107,7 +174,19 @@ class SamplingService:
         self.max_batch = int(max_batch)
         self._key = jax.random.PRNGKey(seed)
         self._pending: List[SampleTicket] = []
-        self.stats = ServiceStats()
+        self._metrics = obs.InMemoryTracker()
+        self._tracker = tracker
+        self.stats = ServiceStats(self._metrics)
+
+    @property
+    def tracker(self):
+        """The emission target: the per-service accumulator behind
+        ``stats``, teed with the explicit ``tracker=`` override or the
+        process-wide ``obs.current_tracker()`` (re-read per call, so
+        ``obs.configure`` after construction takes effect)."""
+        ext = self._tracker if self._tracker is not None \
+            else obs.current_tracker()
+        return obs.tee(self._metrics, ext)
 
     # -- request path -------------------------------------------------------
     def submit(self, num_samples: int) -> SampleTicket:
@@ -115,7 +194,7 @@ class SamplingService:
             raise ValueError("num_samples must be positive")
         t = SampleTicket(self, num_samples)
         self._pending.append(t)
-        self.stats.samples_requested += num_samples
+        self.tracker.counter("service.samples_requested", num_samples)
         return t
 
     def sample(self, num_samples: int) -> List[List[int]]:
@@ -128,14 +207,17 @@ class SamplingService:
         chunked at max_batch like ``flush``."""
         drawn: List[List[int]] = []
         remaining = self._round_up(num_samples)
+        tr = self.tracker
         while len(drawn) < num_samples:
             batch = min(remaining, self.max_batch)
             self._key, sub = jax.random.split(self._key)
-            picks = sample_kdpp_batched(sub, self.spectrum, k, batch,
-                                        runtime=self.runtime)
-            self.stats.device_calls += 1
-            self.stats.samples_drawn += batch
-            drawn.extend(picks_to_lists(picks))
+            with tr.timer("service.device_call_s", kind="kdpp"):
+                picks = sample_kdpp_batched(sub, self.spectrum, k, batch,
+                                            runtime=self.runtime)
+                rows = picks_to_lists(picks)
+            tr.counter("service.device_calls")
+            tr.counter("service.samples_drawn", batch)
+            drawn.extend(rows)
             remaining -= batch
         return drawn[:num_samples]
 
@@ -164,23 +246,40 @@ class SamplingService:
         total = sum(t.num_samples for t in tickets)
         drawn: List[List[int]] = []
         remaining = self._round_up(total)
+        tr = self.tracker
+        t_flush0 = time.perf_counter()
+        batched = 0
         while len(drawn) < total:
             batch = min(remaining, self.max_batch)
             self._key, sub = jax.random.split(self._key)
-            picks, _, truncated = sample_krondpp_batched(
-                sub, self.spectrum, self.k_max, batch, runtime=self.runtime)
-            self.stats.device_calls += 1
-            self.stats.samples_drawn += batch
+            with tr.timer("service.device_call_s", kind="dpp"):
+                picks, _, truncated = sample_krondpp_batched(
+                    sub, self.spectrum, self.k_max, batch,
+                    runtime=self.runtime)
+                rows = picks_to_lists(picks)
+            tr.counter("service.device_calls")
+            tr.counter("service.samples_drawn", batch)
+            batched += batch
             # under a mesh runtime `truncated` is the GLOBAL (all-shard)
             # row vector with shard padding already sliced off, so this
             # sum aggregates every shard's clipped draws — never shard-0's
             # slice, never phantom counts from pad rows
-            self.stats.truncations += int(truncated.sum())
-            drawn.extend(picks_to_lists(picks))
+            tr.counter("service.truncations", int(truncated.sum()))
+            drawn.extend(rows)
             remaining -= batch
         del self._pending[: len(tickets)]
-        self.stats.flushes += 1
+        tr.counter("service.flushes")
+        now = time.perf_counter()
+        tr.observe("service.flush_s", now - t_flush0, tickets=len(tickets))
+        # requested rows / padded batch rows — a falling gauge means the
+        # power-of-two round-up is drawing mostly surplus rows
+        tr.gauge("service.batch_occupancy", total / max(1, batched))
+        m = self._metrics
+        tr.gauge("service.truncation_rate",
+                 m.counter_value("service.truncations")
+                 / max(1, m.counter_value("service.samples_drawn")))
         off = 0
         for t in tickets:
+            tr.observe("service.queue_wait_s", now - t._submitted)
             t._result = drawn[off: off + t.num_samples]
             off += t.num_samples

@@ -22,6 +22,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..core.krondpp import KronDPP
 
 
@@ -135,7 +136,12 @@ class SpectralCache:
         benchmark JSON so cache behavior shows up in the perf trend.
 
         Usable as ``cache.stats()`` (the facade-era spelling) and as
-        ``cache.stats["hits"]`` (the PR-1 property contract)."""
+        ``cache.stats["hits"]`` (the PR-1 property contract). The key
+        style (snake_case counter names) matches ``ServiceStats`` —
+        ``service.stats()`` and ``cache.stats()`` are the same shape —
+        and every lookup also emits ``spectral_cache.hits`` / ``.misses``
+        / ``.evictions`` counters plus a ``spectral_cache.eigh_s`` wall-
+        time sample through ``repro.obs.current_tracker()``."""
         return _CacheStats(hits=self.hits, misses=self.misses,
                            evictions=self.evictions,
                            size=len(self._entries))
@@ -144,19 +150,30 @@ class SpectralCache:
         self._entries.clear()
 
     def _factor(self, f: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        tracker = obs.current_tracker()
         key = (id(f), tuple(f.shape), str(f.dtype))
         hit = self._entries.get(key)
         if hit is not None:
             self.hits += 1
+            tracker.counter("spectral_cache.hits")
             self._entries.move_to_end(key)
             return hit[1], hit[2]
         self.misses += 1
-        lam, vec = jnp.linalg.eigh(f)
+        tracker.counter("spectral_cache.misses")
+        if obs.enabled(tracker):
+            # the block_until_ready exists only to make the eigh timer an
+            # honest wall-clock sample; the NullTracker path keeps jax's
+            # normal async dispatch
+            with tracker.timer("spectral_cache.eigh_s", n=int(f.shape[0])):
+                lam, vec = jax.block_until_ready(jnp.linalg.eigh(f))
+        else:
+            lam, vec = jnp.linalg.eigh(f)
         lam = jnp.maximum(lam, 0.0)
         self._entries[key] = (f, lam, vec)   # strong ref pins the id
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)
             self.evictions += 1
+            tracker.counter("spectral_cache.evictions")
         return lam, vec
 
     def spectrum(self, dpp: KronDPP) -> FactorSpectrum:

@@ -216,11 +216,25 @@ def _mesh_equivalence_checks():
     assert len(rt._mapped_cache) == 2
 
     # -- service: identical draws AND stats aggregated over all shards ----
+    # each placement runs under its own process-wide tracker, so the obs
+    # emissions (not just the ServiceStats view) must agree on shared keys
+    from repro import obs
     svc_l = m.service(seed=7, cache=dpp.SpectralCache(), k_max=3)
     svc_m = m.service(seed=7, cache=dpp.SpectralCache(), k_max=3, runtime=rt)
-    assert svc_l.sample(20) == svc_m.sample(20)
+    with obs.use(obs.InMemoryTracker()) as t_l:
+        draws_l = svc_l.sample(20)
+    with obs.use(obs.InMemoryTracker()) as t_m:
+        draws_m = svc_m.sample(20)
+    assert draws_l == draws_m
     assert svc_l.stats == svc_m.stats          # incl. truncations (k_max=3
     assert svc_m.stats.truncations > 0         # undersized on purpose)
+    svc_keys = {k for k in t_l.counters if k.startswith("service.")}
+    assert svc_keys == {k for k in t_m.counters
+                        if k.startswith("service.")}
+    for k in sorted(svc_keys):                 # per-shard pad rows sliced
+        assert t_l.counters[k] == t_m.counters[k], k    # before aggregation
+    assert t_m.counters.get("runtime.mesh.map_keys_calls", 0) > 0
+    assert "runtime.mesh.map_keys_calls" not in t_l.counters
 
     # -- fit: constant schedule --------------------------------------------
     batch = m.sample(jax.random.PRNGKey(4), 32)
