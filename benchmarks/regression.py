@@ -26,6 +26,8 @@ Usage:
     python -m benchmarks.regression --fresh-runs 3       # noisier machine
     python -m benchmarks.regression --compare committed.json fresh.json
     python -m benchmarks.regression --jsonl run_log.jsonl  # obs run log
+    python -m benchmarks.regression --jsonl run_log.jsonl \
+        --trace trace.json                   # + chrome://tracing export
 
 The committed reports are read BEFORE the fresh run (benchmark mains
 rewrite them in place), and the fresh run goes through each module's
@@ -195,8 +197,14 @@ def main(argv=None) -> int:
     parser.add_argument("--jsonl", default=None, metavar="PATH",
                         help="append tracker emissions of the fresh run "
                              "to PATH (repro.obs JSONL run log)")
+    parser.add_argument("--trace", default=None, metavar="PATH",
+                        help="after the fresh runs, export the --jsonl run "
+                             "log as a chrome://tracing trace-event file")
     args = parser.parse_args(argv)
 
+    if args.trace and not args.jsonl:
+        parser.error("--trace needs --jsonl (the trace is exported from "
+                     "the run log)")
     if args.jsonl:
         from repro import obs
         obs.configure(obs.current_tracker(), jsonl=args.jsonl)
@@ -226,6 +234,12 @@ def main(argv=None) -> int:
             problems += found
             print(f"regression: {bench}: "
                   f"{'OK' if not found else f'{len(found)} regression(s)'}")
+
+    if args.trace:
+        from repro.obs import ChromeTraceExporter
+        exported = ChromeTraceExporter().export(args.jsonl, args.trace)
+        print(f"regression: wrote {args.trace} "
+              f"({len(exported['traceEvents'])} events)")
 
     if problems:
         print("regression gate FAILED:", file=sys.stderr)

@@ -74,6 +74,11 @@ def main(argv=None) -> int:
         help="append every tracker emission (benchmark.report events, "
              "service/learning/cache metrics) to PATH as a JSONL run log")
     parser.add_argument(
+        "--trace", nargs="?", const="traces", default=None, metavar="DIR",
+        help="export a chrome://tracing trace-event file per benchmark to "
+             "DIR/<name>.trace.json (implies a JSONL run log; default DIR: "
+             "./traces)")
+    parser.add_argument(
         "--list", action="store_true", help="list benchmark names and exit")
     args = parser.parse_args(argv)
 
@@ -91,6 +96,10 @@ def main(argv=None) -> int:
         mods = tuple(by_name[n] for n in args.only)
 
     from repro import obs
+    if args.trace and not args.jsonl:
+        # the Chrome export reads span records back out of a run log
+        os.makedirs(args.trace, exist_ok=True)
+        args.jsonl = os.path.join(args.trace, "run_log.jsonl")
     if args.jsonl:
         obs.configure(obs.current_tracker(), jsonl=args.jsonl)
     tracker = obs.current_tracker()
@@ -103,7 +112,12 @@ def main(argv=None) -> int:
                if args.profile else contextlib.nullcontext())
         t0 = time.perf_counter()
         try:
-            with ctx, tracker.scope(bench=name):
+            # the scope tags every emission with bench=<name> (what the
+            # per-bench Chrome export filters on); the span makes the
+            # benchmark itself the root of any request traces it starts
+            with ctx, tracker.scope(bench=name), \
+                    obs.spans.start_span("benchmark", tracker=tracker,
+                                         bench=name):
                 mod.main()
             tracker.observe("benchmark.wall_s", time.perf_counter() - t0,
                             bench=name)
@@ -113,6 +127,15 @@ def main(argv=None) -> int:
                   file=sys.stderr)
             tracker.counter("benchmark.failures", bench=name)
             failures.append(f"{name}: {type(e).__name__}: {e}")
+    if args.trace:
+        os.makedirs(args.trace, exist_ok=True)
+        for mod in mods:
+            name = _short(mod)
+            out = os.path.join(args.trace, f"{name}.trace.json")
+            exported = obs.ChromeTraceExporter(
+                tag_filter={"bench": name}).export(args.jsonl, out)
+            print(f"run.py: wrote {out} "
+                  f"({len(exported['traceEvents'])} events)", file=sys.stderr)
     if failures:
         print(f"run.py: {len(failures)} benchmark(s) FAILED:",
               file=sys.stderr)

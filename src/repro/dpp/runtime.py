@@ -268,7 +268,16 @@ class Mesh(Runtime):
         else:
             mapped = self.shard_map(fn, in_specs=(spec, P()),
                                     out_specs=spec)
-        out = mapped(keys, operands)
+        if obs.enabled(tracker):
+            # span + block_until_ready mirror the SpectralCache eigh
+            # pattern: the sync exists only to make the span an honest
+            # wall-clock sample, and only when someone is listening
+            with obs.spans.start_span("runtime.mesh.map_keys",
+                                      tracker=tracker, keys=n,
+                                      shards=shards):
+                out = jax.block_until_ready(mapped(keys, operands))
+        else:
+            out = mapped(keys, operands)
         if pad:
             out = jax.tree_util.tree_map(lambda x: x[:n], out)
         # emitted AFTER the pad slice, so per-shard row stats downstream

@@ -58,11 +58,25 @@ def main():
     ap.add_argument("--max-dense", type=int, default=None,
                     help="raise the dense-materialization guard (em on a "
                          "Kron model needs N <= this; default 4096)")
+    ap.add_argument("--jsonl", default=None, metavar="PATH",
+                    help="append every repro.obs emission (learning.* "
+                         "metrics, spans, health.* sentinels) to PATH as "
+                         "a JSONL run log")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="after the fit, export the --jsonl run log as a "
+                         "chrome://tracing trace-event file")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.trace and not args.jsonl:
+        ap.error("--trace needs --jsonl (the trace is exported from the "
+                 "run log)")
 
     import jax
+    from .. import obs
     from ..dpp import MAX_DENSE_N, random_kron, runtime, schedules
+
+    if args.jsonl:
+        obs.configure(obs.current_tracker(), jsonl=args.jsonl)
 
     # ---- ground-truth model + device-drawn training subsets ----
     key = jax.random.PRNGKey(args.seed)
@@ -103,7 +117,14 @@ def main():
         "ll_final": round(rep.log_likelihoods[-1], 4)
         if rep.log_likelihoods else None,
         "armijo_backtracks": int(rep.state.sched.backtracks),
+        "health": rep.health["verdict"] if rep.health else None,
+        "health_triggered": sorted(rep.health["triggered"])
+        if rep.health else [],
     }))
+    if args.trace:
+        exported = obs.ChromeTraceExporter().export(args.jsonl, args.trace)
+        print(f"learn: wrote {args.trace} "
+              f"({len(exported['traceEvents'])} events)")
 
 
 def _nonempty(batch):

@@ -41,7 +41,10 @@ from .objective import log_likelihood_factored
 class FitReport:
     """What a fit returns. ``model`` is a KronDPP for krk/joint and the
     dense reconstruction V diag(λ) V^T for em; ``log_likelihoods[i]`` is
-    the tracked LL after sweep ``ll_sweeps[i]`` (sweep 0 = init)."""
+    the tracked LL after sweep ``ll_sweeps[i]`` (sweep 0 = init).
+    ``health`` is the final ``HealthMonitor.report()`` dict (verdict,
+    sentinel gauges, triggered thresholds) when health monitoring was on
+    — automatic whenever a tracker is configured — else None."""
     model: Any
     state: LearnerState
     log_likelihoods: List[float]
@@ -49,6 +52,7 @@ class FitReport:
     sweep_times: List[float]
     sweeps: int
     sweeps_per_sec: float
+    health: Optional[dict] = None
 
 
 # one engine (== one jitted chunk) per static config, so repeated fits with
@@ -99,7 +103,7 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
         use_dense_theta: bool = False, fresh_theta: bool = True,
         checkpoint_dir: Optional[str] = None, save_every: Optional[int] = None,
         resume: bool = False, mesh=None, runtime=None,
-        power_iters: int = 50) -> FitReport:
+        power_iters: int = 50, health=None) -> FitReport:
     """Fit a (Kron)DPP to a subset batch with the device-resident engine.
 
     algorithm: "krk" (batch Alg. 1), "krk-stochastic" (on-device
@@ -123,6 +127,14 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
         count (``runtime.even_batch`` trims).
     mesh: deprecated — a raw jax Mesh, shimmed onto
         ``runtime=Mesh.from_jax_mesh(mesh)`` with a DeprecationWarning.
+    health: numerics sentinels (``repro.obs.health``) checked at every
+        chunk boundary — PSD margin / condition number of the factors,
+        nonfinite-LL flag, Armijo backtrack streak — folded into the
+        ``FitReport.health`` verdict and emitted as ``health.*`` gauges
+        plus one ``health.report`` event. Pass an ``obs.HealthMonitor``
+        (or ``obs.HealthThresholds`` for custom trip levels) to force it
+        on; default None monitors automatically iff a tracker is
+        configured, keeping the untracked path check-free.
     """
     from ..dpp import runtime as runtime_mod
     rt = runtime_mod.resolve(runtime, mesh=mesh, stacklevel=3)
@@ -159,6 +171,22 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
     start_sweep = int(state.sweep)
     remaining = max(0, iters - start_sweep)
 
+    if isinstance(health, obs.HealthMonitor):
+        monitor = health
+    elif isinstance(health, obs.HealthThresholds):
+        monitor = obs.HealthMonitor(thresholds=health, component="learning")
+    elif health is None and obs.enabled(obs.current_tracker()):
+        monitor = obs.HealthMonitor(component="learning")
+    else:
+        monitor = None
+    if monitor is not None:
+        # checked on the INITIAL params too, so a rank-deficient or
+        # ill-conditioned starting kernel is flagged even when the
+        # updates immediately move away from it
+        monitor.check_learning(
+            state.params, algorithm,
+            ll=float(state.ll) if ll_mode != "none" else None)
+
     lls: List[float] = []
     ll_sweeps: List[int] = []
     if ll_mode != "none" and start_sweep == 0:
@@ -174,14 +202,16 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
             manager.save(sweep, st)
             last_saved = sweep
 
-    if rt.is_mesh:
-        state, run_lls, run_sweeps, times = _run_mesh(
-            engine, state, batch, remaining, log_every, rt, schedule,
-            checkpoint_cb, algorithm)
-    else:
-        state, run_lls, run_sweeps, times = engine.run(
-            state, batch, remaining, log_every=log_every,
-            callback=checkpoint_cb)
+    with obs.spans.start_span("learning.fit", algorithm=algorithm,
+                              runtime=rt.kind, iters=iters):
+        if rt.is_mesh:
+            state, run_lls, run_sweeps, times = _run_mesh(
+                engine, state, batch, remaining, log_every, rt, schedule,
+                checkpoint_cb, algorithm, health=monitor)
+        else:
+            state, run_lls, run_sweeps, times = engine.run(
+                state, batch, remaining, log_every=log_every,
+                callback=checkpoint_cb, health=monitor)
     lls.extend(run_lls)
     ll_sweeps.extend(run_sweeps)
 
@@ -192,6 +222,7 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
 
     total_t = sum(times)
     sweeps_per_sec = (remaining / total_t) if total_t > 0 else float("inf")
+    health_report = monitor.report(emit=True) if monitor is not None else None
     tracker = obs.current_tracker()
     if obs.enabled(tracker):
         tracker.event(
@@ -203,12 +234,14 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
     return FitReport(
         model=_to_model(state.params, algorithm), state=state,
         log_likelihoods=lls, ll_sweeps=ll_sweeps, sweep_times=times,
-        sweeps=int(state.sweep), sweeps_per_sec=sweeps_per_sec)
+        sweeps=int(state.sweep), sweeps_per_sec=sweeps_per_sec,
+        health=health_report)
 
 
 def _run_mesh(engine: LearningEngine, state: LearnerState,
               batch: SubsetBatch, iters: int, log_every: int, runtime,
-              schedule: schedules_mod.Schedule, callback, algorithm):
+              schedule: schedules_mod.Schedule, callback, algorithm,
+              health=None):
     """KrK sweeps through the mesh-sharded sweep region: Θ-statistics and
     Armijo acceptance LLs psum'd over the data axes, per-shard stochastic
     minibatches, updates replicated. Host-driven per sweep (the scan-
@@ -255,20 +288,23 @@ def _run_mesh(engine: LearningEngine, state: LearnerState,
     ll_jit = jax.jit(log_likelihood_factored)
     tracker = obs.current_tracker()
     track = obs.enabled(tracker)
-    prev_bt = int(state.sched.backtracks) if track else 0
+    need_bt = track or health is not None
+    prev_bt = int(state.sched.backtracks) if need_bt else 0
     while done < iters:
         n = min(max(1, log_every), iters - done)
         chunk_lls = []
         t0 = time.perf_counter()
-        for _ in range(n):
-            key, k_sel = jax.random.split(key)
-            a_t = schedules_mod.trial_step(schedule, sched)
-            L1, L2, a_acc, n_bt = sweep(L1, L2, sbatch.indices,
-                                        sbatch.mask, k_sel, a_t)
-            sched = schedules_mod.advance(schedule, sched, a_acc, n_bt)
-            if engine.ll_mode == "sweep":
-                chunk_lls.append(ll_jit((L1, L2), batch))
-        jax.block_until_ready((L1, L2))
+        with obs.spans.start_span("learning.chunk", tracker=tracker,
+                                  sweeps=n, algorithm=algorithm):
+            for _ in range(n):
+                key, k_sel = jax.random.split(key)
+                a_t = schedules_mod.trial_step(schedule, sched)
+                L1, L2, a_acc, n_bt = sweep(L1, L2, sbatch.indices,
+                                            sbatch.mask, k_sel, a_t)
+                sched = schedules_mod.advance(schedule, sched, a_acc, n_bt)
+                if engine.ll_mode == "sweep":
+                    chunk_lls.append(ll_jit((L1, L2), batch))
+            jax.block_until_ready((L1, L2))
         times.append(time.perf_counter() - t0)
         done += n
         if engine.ll_mode == "sweep":
@@ -285,14 +321,21 @@ def _run_mesh(engine: LearningEngine, state: LearnerState,
         state = dataclasses.replace(
             state, params=(L1, L2), sweep=state.sweep + n, key=key,
             sched=sched, ll=last_ll)
+        bt_now = int(state.sched.backtracks) if need_bt else 0
+        new_lls = lls[len(lls) - n:] if engine.ll_mode == "sweep" \
+            else lls[-1:] if engine.ll_mode == "chunk" else []
         if track:
-            new_lls = lls[len(lls) - n:] if engine.ll_mode == "sweep" \
-                else lls[-1:] if engine.ll_mode == "chunk" else []
-            prev_bt = emit_sweep_metrics(
+            emit_sweep_metrics(
                 tracker, algorithm=algorithm, runtime="mesh",
                 seconds=times[-1], sweeps=n, state=state,
                 prev_backtracks=prev_bt, lls=new_lls,
                 first_sweep=start + done - len(new_lls) + 1)
+        if health is not None:
+            health.check_learning(
+                state.params, algorithm,
+                ll=new_lls[-1] if new_lls else None,
+                backtracks=bt_now - prev_bt)
+        prev_bt = bt_now
         if callback is not None:
             callback(state)
     return state, lls, ll_sweeps, times

@@ -250,7 +250,8 @@ class LearningEngine:
 
     def run(self, state: LearnerState, batch: SubsetBatch, iters: int,
             log_every: int = 1,
-            callback: Optional[Callable[[LearnerState], None]] = None
+            callback: Optional[Callable[[LearnerState], None]] = None,
+            health: Optional["obs.HealthMonitor"] = None
             ) -> Tuple[LearnerState, List[float], List[int], List[float]]:
         """Drive ``iters`` sweeps as ceil(iters/log_every) compiled chunks.
 
@@ -262,8 +263,13 @@ class LearningEngine:
         When a tracker is configured (``repro.obs``), each chunk also
         emits ``learning.*`` metrics — chunk wall time, sweeps, per-sweep
         log-likelihood, Armijo backtrack counts, accepted step size
-        (``emit_sweep_metrics``). With the default ``NullTracker`` the
-        loop is emission-free.
+        (``emit_sweep_metrics``) — and a ``learning.chunk`` span (nested
+        under the caller's trace, e.g. ``learning.fit``'s). With the
+        default ``NullTracker`` the loop is emission-free.
+
+        health: an ``obs.HealthMonitor`` fed ``check_learning`` at every
+        chunk boundary — the host is already synced there, so the
+        sentinel eigendecompositions add no extra device round-trip.
         """
         log_every = max(1, int(log_every))
         lls: List[float] = []
@@ -273,12 +279,15 @@ class LearningEngine:
         done = 0
         tracker = obs.current_tracker()
         track = obs.enabled(tracker)
-        prev_bt = int(state.sched.backtracks) if track else 0
+        need_bt = track or health is not None
+        prev_bt = int(state.sched.backtracks) if need_bt else 0
         while done < iters:
             n = min(log_every, iters - done)
             t0 = time.perf_counter()
-            state, chunk_lls = self._chunk(state, batch, n)
-            jax.block_until_ready(state.params)
+            with obs.spans.start_span("learning.chunk", tracker=tracker,
+                                      sweeps=n, algorithm=self.algorithm):
+                state, chunk_lls = self._chunk(state, batch, n)
+                jax.block_until_ready(state.params)
             times.append(time.perf_counter() - t0)
             done += n
             chunk_track_lls: List[float] = []
@@ -290,12 +299,19 @@ class LearningEngine:
                 chunk_track_lls = [float(state.ll)]
                 lls.append(chunk_track_lls[0])
                 ll_sweeps.append(start + done)
+            bt_now = int(state.sched.backtracks) if need_bt else 0
             if track:
-                prev_bt = emit_sweep_metrics(
+                emit_sweep_metrics(
                     tracker, algorithm=self.algorithm, runtime="local",
                     seconds=times[-1], sweeps=n, state=state,
                     prev_backtracks=prev_bt, lls=chunk_track_lls,
                     first_sweep=start + done - len(chunk_track_lls) + 1)
+            if health is not None:
+                health.check_learning(
+                    state.params, self.algorithm,
+                    ll=chunk_track_lls[-1] if chunk_track_lls else None,
+                    backtracks=bt_now - prev_bt)
+            prev_bt = bt_now
             if callback is not None:
                 callback(state)
         return state, lls, ll_sweeps, times

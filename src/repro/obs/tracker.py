@@ -63,6 +63,9 @@ class _NullContext:
 
 _NULL_CONTEXT = _NullContext()
 
+#: per-thread scope-tag stacks, keyed by tracker id (see Tracker._push_tags)
+_SCOPES = threading.local()
+
 
 class Tracker:
     """The emission protocol. Subclasses override the four primitives;
@@ -91,17 +94,26 @@ class Tracker:
         return _Scope(self, tags)
 
     # -- scope plumbing (overridden to a no-op in NullTracker) --------------
+    # Tag stacks are PER THREAD (keyed per tracker in a threading.local):
+    # a scope pushed on the main thread must not leak into emissions made
+    # concurrently from a service flush thread, and an interleaved
+    # push/pop from two threads must not corrupt either stack.
     def _push_tags(self, tags: Dict[str, Any]) -> None:
-        stack = getattr(self, "_tag_stack", None)
-        if stack is None:
-            stack = self._tag_stack = []
-        stack.append(tags)
+        stacks = getattr(_SCOPES, "stacks", None)
+        if stacks is None:
+            stacks = _SCOPES.stacks = {}
+        stacks.setdefault(id(self), []).append(tags)
 
     def _pop_tags(self) -> None:
-        self._tag_stack.pop()
+        stacks = _SCOPES.stacks
+        key = id(self)
+        stacks[key].pop()
+        if not stacks[key]:
+            del stacks[key]   # don't let dead trackers' ids accumulate
 
     def _merged(self, tags: Dict[str, Any]) -> Dict[str, Any]:
-        stack = getattr(self, "_tag_stack", None)
+        stacks = getattr(_SCOPES, "stacks", None)
+        stack = stacks.get(id(self)) if stacks else None
         if not stack:
             return tags
         out: Dict[str, Any] = {}
@@ -262,6 +274,11 @@ class JsonlTracker(Tracker):
     merged scope tags; each line is flushed as written so the log is
     readable while the run is live and complete up to any crash. Read one
     back with ``[json.loads(l) for l in open(path)]``.
+
+    Concurrency: the JSON line is serialized outside the lock, but the
+    file write happens under it — records from the service flush thread
+    and the main thread interleave whole-line, never mid-record (pinned
+    by the multi-thread round-trip test in ``tests/test_obs_spans.py``).
     """
 
     def __init__(self, path: str):
@@ -278,7 +295,8 @@ class JsonlTracker(Tracker):
             rec["tags"] = _jsonable(tags)
         line = json.dumps(rec, sort_keys=True)
         with self._lock:
-            self._f.write(line + "\n")
+            if not self._f.closed:
+                self._f.write(line + "\n")
 
     def counter(self, name: str, value: int = 1, **tags) -> None:
         self._write("counter", name, {"value": value}, tags)

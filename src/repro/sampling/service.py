@@ -23,6 +23,7 @@ import time
 from typing import List, Optional
 
 import jax
+import numpy as np
 
 from .. import obs
 from ..core.krondpp import KronDPP
@@ -32,13 +33,21 @@ from .spectral import SpectralCache, default_cache
 
 
 class SampleTicket:
-    """Handle for a submitted request; ``result()`` flushes if needed."""
+    """Handle for a submitted request; ``result()`` flushes if needed.
+
+    Every ticket is a trace root: ``trace_id`` is minted at ``submit()``
+    and whichever thread runs ``flush()`` parents its span tree on it, so
+    a coalesced flush still attributes queue wait / device time / scatter
+    to each individual request (see ``repro.obs.spans``)."""
 
     def __init__(self, service: "SamplingService", num_samples: int):
         self._service = service
         self.num_samples = num_samples
         self._result: Optional[List[List[int]]] = None
         self._submitted = time.perf_counter()   # queue-wait measurement
+        self._submitted_ts = time.time()        # wall anchor for spans
+        self.trace_id = obs.spans.new_trace_id()
+        self._span_id = obs.spans.new_span_id()  # the request's root span
 
     def done(self) -> bool:
         return self._result is not None
@@ -88,6 +97,15 @@ class ServiceStats:
             raise TypeError("pass either a metrics tracker or counts, "
                             "not both")
         self._metrics = metrics
+        self._health: Optional[obs.HealthMonitor] = None
+
+    @property
+    def health(self) -> str:
+        """The attached ``HealthMonitor``'s verdict; a detached snapshot
+        (legacy ctor) has no monitor and reads ``healthy``. Not part of
+        the ``stats()`` dict — the counter snapshot keys are a pinned
+        contract."""
+        return self._health.verdict if self._health is not None else "healthy"
 
     def _value(self, key: str) -> int:
         return int(self._metrics.counter_value(f"service.{key}"))
@@ -145,6 +163,13 @@ class SamplingService:
     — through a per-service ``InMemoryTracker`` teed with the
     process-wide ``obs.current_tracker()`` (or an explicit ``tracker=``).
     ``stats`` is a live view over those counters.
+
+    When the external tracker is live (``obs.configure`` or an explicit
+    ``tracker=``), each flush additionally emits a span tree per ticket —
+    root ``service.request`` with ``queue-wait → coalesce → device-call
+    → scatter`` children under the ticket's ``trace_id`` — plus
+    ``health.*`` sampling sentinels (truncation/collapse rates, streaks)
+    folded into ``service.health`` / ``stats.health``.
     """
 
     def __init__(self, dpp, k_max: Optional[int] = None,
@@ -177,6 +202,20 @@ class SamplingService:
         self._metrics = obs.InMemoryTracker()
         self._tracker = tracker
         self.stats = ServiceStats(self._metrics)
+        # sampling-side sentinels: truncation/residual-mass-collapse rates
+        # and truncation streaks, folded into a verdict (obs.health). The
+        # late-bound tracker keeps gauges flowing to whatever the tee
+        # resolves to at check time.
+        self.health = obs.HealthMonitor(tracker=lambda: self.tracker,
+                                        component="sampling")
+        self.stats._health = self.health
+
+    def _external_tracker(self):
+        """The external sink only (explicit ``tracker=`` override or the
+        process-wide seam) — span/event emission targets this alone, so
+        the per-service accumulator's event list stays bounded."""
+        return self._tracker if self._tracker is not None \
+            else obs.current_tracker()
 
     @property
     def tracker(self):
@@ -184,9 +223,7 @@ class SamplingService:
         ``stats``, teed with the explicit ``tracker=`` override or the
         process-wide ``obs.current_tracker()`` (re-read per call, so
         ``obs.configure`` after construction takes effect)."""
-        ext = self._tracker if self._tracker is not None \
-            else obs.current_tracker()
-        return obs.tee(self._metrics, ext)
+        return obs.tee(self._metrics, self._external_tracker())
 
     # -- request path -------------------------------------------------------
     def submit(self, num_samples: int) -> SampleTicket:
@@ -239,34 +276,64 @@ class SamplingService:
         Tickets stay pending until every draw succeeds, so a failed device
         call (OOM, interrupt) leaves them retryable instead of stranding
         ``result()`` callers.
+
+        With a live external tracker, the flush also emits each ticket's
+        span tree (root ``service.request``, children ``queue-wait →
+        coalesce → device-call → scatter``). The first pending ticket is
+        the CARRIER: its device-call span is opened live around the
+        device loop, so spans emitted inside (``runtime.mesh.map_keys``,
+        ``spectral_cache.eigh``) nest under a real request trace; the
+        other tickets get equivalent synthesized device-call spans.
         """
         if not self._pending:
             return
         tickets = list(self._pending)
+        tr = self.tracker
+        ext = self._external_tracker()
+        span_ext = ext if obs.enabled(ext) else None
+        t_flush0 = time.perf_counter()
+        w_flush0 = time.time()          # wall anchor for span timestamps
         total = sum(t.num_samples for t in tickets)
         drawn: List[List[int]] = []
         remaining = self._round_up(total)
-        tr = self.tracker
-        t_flush0 = time.perf_counter()
+        padded = remaining
+        t_coalesced = time.perf_counter()
         batched = 0
-        while len(drawn) < total:
-            batch = min(remaining, self.max_batch)
-            self._key, sub = jax.random.split(self._key)
-            with tr.timer("service.device_call_s", kind="dpp"):
-                picks, _, truncated = sample_krondpp_batched(
-                    sub, self.spectrum, self.k_max, batch,
-                    runtime=self.runtime)
-                rows = picks_to_lists(picks)
-            tr.counter("service.device_calls")
-            tr.counter("service.samples_drawn", batch)
-            batched += batch
-            # under a mesh runtime `truncated` is the GLOBAL (all-shard)
-            # row vector with shard padding already sliced off, so this
-            # sum aggregates every shard's clipped draws — never shard-0's
-            # slice, never phantom counts from pad rows
-            tr.counter("service.truncations", int(truncated.sum()))
-            drawn.extend(rows)
-            remaining -= batch
+        truncations = 0
+        collapsed = 0
+        carrier = tickets[0]
+        live = obs.spans.NULL_SPAN if span_ext is None else \
+            obs.spans.start_span("device-call", tracker=span_ext,
+                                 parent=(carrier.trace_id, carrier._span_id),
+                                 kind="dpp", batch=padded)
+        with live:
+            while len(drawn) < total:
+                batch = min(remaining, self.max_batch)
+                self._key, sub = jax.random.split(self._key)
+                with tr.timer("service.device_call_s", kind="dpp"):
+                    picks, counts, truncated = sample_krondpp_batched(
+                        sub, self.spectrum, self.k_max, batch,
+                        runtime=self.runtime)
+                    rows = picks_to_lists(picks)
+                tr.counter("service.device_calls")
+                tr.counter("service.samples_drawn", batch)
+                batched += batch
+                # under a mesh runtime `truncated` is the GLOBAL (all-shard)
+                # row vector with shard padding already sliced off, so this
+                # sum aggregates every shard's clipped draws — never shard-0's
+                # slice, never phantom counts from pad rows
+                n_trunc = int(truncated.sum())
+                tr.counter("service.truncations", n_trunc)
+                truncations += n_trunc
+                # residual-mass collapse sentinel: rows whose phase 2 ran
+                # out of probability mass before drawing the |J| items the
+                # spectral phase asked for
+                want = np.asarray(counts)
+                collapsed += sum(1 for r, w in zip(rows, want)
+                                 if len(r) < int(w))
+                drawn.extend(rows)
+                remaining -= batch
+        t_device_done = time.perf_counter()
         del self._pending[: len(tickets)]
         tr.counter("service.flushes")
         now = time.perf_counter()
@@ -283,3 +350,38 @@ class SamplingService:
             tr.observe("service.queue_wait_s", now - t._submitted)
             t._result = drawn[off: off + t.num_samples]
             off += t.num_samples
+        self.health.check_sampling(drawn=batched, truncated=truncations,
+                                   collapsed=collapsed)
+        if span_ext is not None:
+            self.health.report(emit=True, tracker=span_ext)
+            self._emit_request_spans(span_ext, tickets, carrier, w_flush0,
+                                     t_flush0, t_coalesced, t_device_done,
+                                     time.perf_counter())
+
+    def _emit_request_spans(self, ext, tickets, carrier, w0, t0, t1, t2, t3
+                            ) -> None:
+        """Synthesize each ticket's span tree after a coalesced flush:
+        the flush phases were timed once on the monotonic clock
+        (t0 start → t1 coalesced → t2 device done → t3 scattered) and are
+        replicated into every ticket's trace, mapped onto the wall clock
+        via the flush anchor (w0 ↔ t0). The carrier's device-call span
+        was already emitted live."""
+        def wall(t):
+            return w0 + (t - t0)
+
+        for t in tickets:
+            kw = dict(trace_id=t.trace_id, parent_id=t._span_id)
+            obs.spans.emit_span(ext, "queue-wait", ts=t._submitted_ts,
+                                dur_s=max(t0 - t._submitted, 0.0), **kw)
+            obs.spans.emit_span(ext, "coalesce", ts=wall(t0), dur_s=t1 - t0,
+                                tickets=len(tickets), **kw)
+            if t is not carrier:
+                obs.spans.emit_span(ext, "device-call", ts=wall(t1),
+                                    dur_s=t2 - t1, kind="dpp", **kw)
+            obs.spans.emit_span(ext, "scatter", ts=wall(t2), dur_s=t3 - t2,
+                                **kw)
+            obs.spans.emit_span(ext, "service.request", trace_id=t.trace_id,
+                                span_id=t._span_id, parent_id=None,
+                                ts=t._submitted_ts,
+                                dur_s=max(wall(t3) - t._submitted_ts, 0.0),
+                                num_samples=t.num_samples)

@@ -163,9 +163,13 @@ class SpectralCache:
         if obs.enabled(tracker):
             # the block_until_ready exists only to make the eigh timer an
             # honest wall-clock sample; the NullTracker path keeps jax's
-            # normal async dispatch
-            with tracker.timer("spectral_cache.eigh_s", n=int(f.shape[0])):
-                lam, vec = jax.block_until_ready(jnp.linalg.eigh(f))
+            # normal async dispatch. The span makes the recompute show up
+            # INSIDE whatever request trace paid for the cache miss.
+            with obs.spans.start_span("spectral_cache.eigh", tracker=tracker,
+                                      n=int(f.shape[0])):
+                with tracker.timer("spectral_cache.eigh_s",
+                                   n=int(f.shape[0])):
+                    lam, vec = jax.block_until_ready(jnp.linalg.eigh(f))
         else:
             lam, vec = jnp.linalg.eigh(f)
         lam = jnp.maximum(lam, 0.0)

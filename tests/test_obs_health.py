@@ -1,0 +1,270 @@
+"""repro.obs.health — numerics health sentinels.
+
+Unit-level coverage of the learning sentinels (PSD margin, condition
+number, nonfinite params/LL, Armijo backtrack streaks) and the sampling
+sentinels (cumulative truncation/collapse rates, truncation streaks),
+plus the integration seams: ``fit(...)`` → ``FitReport.health`` with a
+degraded verdict on a rank-deficient problem, and the sampling service
+updating its monitor on every flush (``ServiceStats.health``).
+"""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import dpp, obs
+from repro.obs.health import HealthMonitor, HealthThresholds
+
+
+def _sane_factors(n1=3, n2=4, seed=0):
+    rng = np.random.default_rng(seed)
+    def spd(n):
+        a = rng.standard_normal((n, n))
+        return a @ a.T + n * np.eye(n)
+    return spd(n1), spd(n2)
+
+
+# ---------------------------------------------------------------------------
+# learning sentinels (unit level)
+# ---------------------------------------------------------------------------
+
+def test_well_conditioned_params_are_healthy():
+    mon = HealthMonitor()
+    verdict = mon.check_learning(_sane_factors(), "krk", ll=-12.3)
+    assert verdict == "healthy"
+    assert mon.triggered == {} and mon.failing == {}
+    g = mon.gauges
+    assert g["min_eigenvalue"] > 0
+    assert g["psd_margin"] > HealthThresholds().min_psd_margin
+    assert g["log10_condition"] < HealthThresholds().max_log10_condition
+    assert g["ll_nonfinite"] == 0.0 and g["params_nonfinite"] == 0.0
+    report = mon.report(emit=False)
+    assert report["verdict"] == "healthy" and report["worst"] == "healthy"
+    assert report["component"] == "learning"
+
+
+def test_thin_psd_margin_degrades():
+    _, L2 = _sane_factors()
+    v = np.ones((3, 1))
+    thin = v @ v.T + 1e-8 * np.eye(3)       # PSD but margin ~ 3e-9
+    mon = HealthMonitor()
+    assert mon.check_learning((thin, L2), "krk") == "degraded"
+    assert "psd_margin" in mon.triggered
+    assert mon.failing == {}
+    assert 0 < mon.gauges["psd_margin"] < HealthThresholds().min_psd_margin
+
+
+def test_negative_eigenvalue_is_failing():
+    _, L2 = _sane_factors()
+    indef = np.diag([1.0, 1.0, -0.5])       # not a covariance factor at all
+    mon = HealthMonitor()
+    assert mon.check_learning((indef, L2), "krk") == "failing"
+    assert "min_eigenvalue" in mon.failing
+
+
+def test_huge_condition_number_degrades():
+    _, L2 = _sane_factors()
+    skewed = np.diag([1e14, 1.0, 1.0])
+    mon = HealthMonitor()
+    assert mon.check_learning((skewed, L2), "krk") == "degraded"
+    assert "log10_condition" in mon.triggered
+    assert mon.gauges["log10_condition"] > 12.0
+
+
+def test_nonfinite_params_hard_trip_without_eigvalsh_crash():
+    _, L2 = _sane_factors()
+    bad = np.full((3, 3), np.nan)
+    mon = HealthMonitor()
+    # np.linalg.eigvalsh raises on NaN input; the monitor must report,
+    # never crash the fit it is watching
+    assert mon.check_learning((bad, L2), "krk") == "failing"
+    assert "params_nonfinite" in mon.failing
+    assert "min_eigenvalue" not in mon.gauges   # spectral gauges skipped
+
+
+def test_nonfinite_ll_is_failing():
+    mon = HealthMonitor()
+    assert mon.check_learning(_sane_factors(), "krk",
+                              ll=float("nan")) == "failing"
+    assert "ll_nonfinite" in mon.failing
+    mon2 = HealthMonitor()
+    assert mon2.check_learning(_sane_factors(), "krk",
+                               ll=-math.inf) == "failing"
+
+
+def test_em_params_are_a_spectrum_not_a_factor():
+    # em carries (lam, V): lam IS the eigenvalue vector, no eigh needed
+    lam = np.array([2.0, 1.0, 0.5])
+    V = np.eye(3)
+    mon = HealthMonitor()
+    assert mon.check_learning((lam, V), "em", ll=-3.0) == "healthy"
+    assert mon.gauges["min_eigenvalue"] == pytest.approx(0.5)
+
+
+def test_backtrack_streak_degrades_and_resets():
+    mon = HealthMonitor()
+    params = _sane_factors()
+    for _ in range(HealthThresholds().max_backtrack_streak):
+        assert mon.check_learning(params, "krk", backtracks=2) == "healthy"
+    assert mon.check_learning(params, "krk", backtracks=1) == "degraded"
+    assert "backtrack_streak" in mon.triggered
+    # a clean chunk breaks the streak and clears the CURRENT verdict...
+    assert mon.check_learning(params, "krk", backtracks=0) == "healthy"
+    assert "backtrack_streak" not in mon.triggered
+    # ...but the sticky low-water mark remembers
+    assert mon.worst_verdict == "degraded"
+    assert mon.report(emit=False)["worst"] == "degraded"
+
+
+def test_custom_thresholds_are_honored():
+    strict = HealthThresholds(max_log10_condition=0.0)  # any spread trips
+    mon = HealthMonitor(thresholds=strict)
+    assert mon.check_learning(_sane_factors(), "krk") == "degraded"
+    assert "log10_condition" in mon.triggered
+
+
+# ---------------------------------------------------------------------------
+# sampling sentinels (unit level)
+# ---------------------------------------------------------------------------
+
+def test_sampling_rates_are_cumulative():
+    mon = HealthMonitor(component="sampling")
+    assert mon.check_sampling(drawn=10, truncated=0, collapsed=0) == "healthy"
+    assert mon.gauges["truncation_rate"] == 0.0
+    # 6 truncations over 20 cumulative draws = 30% > 25% default
+    assert mon.check_sampling(drawn=10, truncated=6, collapsed=0) == "degraded"
+    assert mon.gauges["truncation_rate"] == pytest.approx(0.3)
+    assert "truncation_rate" in mon.triggered
+
+
+def test_collapse_rate_sentinel():
+    mon = HealthMonitor(component="sampling")
+    assert mon.check_sampling(drawn=4, truncated=0, collapsed=2) == "degraded"
+    assert "collapse_rate" in mon.triggered
+    assert mon.gauges["collapse_rate"] == pytest.approx(0.5)
+
+
+def test_truncation_streak_sentinel():
+    mon = HealthMonitor(
+        component="sampling",
+        thresholds=HealthThresholds(max_truncation_rate=1.0))  # isolate streak
+    for _ in range(HealthThresholds().max_truncation_streak):
+        mon.check_sampling(drawn=100, truncated=1, collapsed=0)
+    assert "truncation_streak" not in mon.triggered
+    mon.check_sampling(drawn=100, truncated=1, collapsed=0)
+    assert "truncation_streak" in mon.triggered
+    mon.check_sampling(drawn=100, truncated=0, collapsed=0)  # clean flush
+    assert "truncation_streak" not in mon.triggered
+
+
+def test_health_gauges_flow_through_the_tracker():
+    t = obs.InMemoryTracker()
+    mon = HealthMonitor(tracker=t, component="sampling")
+    mon.check_sampling(drawn=4, truncated=4, collapsed=0)
+    assert "health.truncation_rate" in t.gauges
+    assert t.gauges["health.truncation_rate"] == pytest.approx(1.0)
+    rep = mon.report(emit=True)
+    (ev,) = [e for e in t.events if e["name"] == "health.report"]
+    assert ev["verdict"] == rep["verdict"] == "degraded"
+    assert ev["component"] == "sampling"
+    assert "truncation_rate" in ev["triggered"]
+
+
+def test_monitor_without_tracker_emits_nothing():
+    mon = HealthMonitor()                       # resolves to NullTracker
+    mon.check_sampling(drawn=1, truncated=1, collapsed=1)
+    rep = mon.report(emit=True)                 # emit is a no-op, not a crash
+    assert rep["verdict"] == "degraded"
+
+
+# ---------------------------------------------------------------------------
+# integration: fit() -> FitReport.health
+# ---------------------------------------------------------------------------
+
+def _data(model, n=24, seed=1):
+    return model.sample(jax.random.PRNGKey(seed), n)
+
+
+def test_fit_health_none_when_untracked():
+    model = dpp.random_kron(jax.random.PRNGKey(0), (3, 4)).rescale(3.0)
+    rep = model.fit(_data(model), algorithm="krk", iters=2, log_every=2)
+    assert rep.health is None                   # no tracker, no monitor
+
+
+def test_fit_reports_healthy_under_a_tracker():
+    t = obs.InMemoryTracker()
+    model = dpp.random_kron(jax.random.PRNGKey(0), (3, 4)).rescale(3.0)
+    with obs.use(t):
+        rep = model.fit(_data(model), algorithm="krk", iters=2, log_every=2)
+    assert rep.health is not None
+    assert rep.health["verdict"] == "healthy"
+    assert rep.health["component"] == "learning"
+    assert rep.health["gauges"]["psd_margin"] > 0
+    assert "health.psd_margin" in t.gauges
+    (ev,) = [e for e in t.events if e["name"] == "health.report"]
+    assert ev["verdict"] == "healthy"
+
+
+def test_fit_degrades_on_rank_deficient_init():
+    # a numerically-thin (but PSD) first factor: v v^T + 1e-8 I. With a
+    # vanishing step the fit cannot repair it, and the monitor flags the
+    # collapsed PSD margin at init and on every chunk
+    v = np.ones((3, 1))
+    L1 = v @ v.T + 1e-8 * np.eye(3)
+    L2 = _sane_factors()[1]
+    deficient = dpp.from_factors(L1, L2)
+    good = dpp.random_kron(jax.random.PRNGKey(0), (3, 4)).rescale(3.0)
+    t = obs.InMemoryTracker()
+    with obs.use(t):
+        rep = deficient.fit(_data(good), algorithm="krk", iters=2,
+                            log_every=2, a=1e-9, ll_mode="none")
+    assert rep.health is not None
+    assert rep.health["worst"] in ("degraded", "failing")
+    assert "psd_margin" in rep.health["triggered"] \
+        or "params_nonfinite" in rep.health["triggered"]
+
+
+def test_fit_accepts_an_explicit_monitor_and_thresholds():
+    model = dpp.random_kron(jax.random.PRNGKey(0), (3, 4)).rescale(3.0)
+    batch = _data(model)
+    mon = HealthMonitor()
+    rep = model.fit(batch, algorithm="krk", iters=2, log_every=2, health=mon)
+    assert rep.health is not None and rep.health["verdict"] == mon.verdict
+    strict = HealthThresholds(max_log10_condition=-1.0)  # everything trips
+    rep2 = model.fit(batch, algorithm="krk", iters=2, log_every=2,
+                     health=strict)
+    assert rep2.health["verdict"] == "degraded"
+    assert "log10_condition" in rep2.health["triggered"]
+
+
+# ---------------------------------------------------------------------------
+# integration: sampling service
+# ---------------------------------------------------------------------------
+
+def test_service_health_updates_on_flush():
+    model = dpp.random_kron(jax.random.PRNGKey(0), (4, 5)).rescale(4.0)
+    svc = model.service(seed=0)
+    assert svc.stats.health == "healthy"        # before any flush
+    svc.sample(4)
+    assert svc.health.verdict in ("healthy", "degraded")
+    assert svc.stats.health == svc.health.verdict
+    assert "truncation_rate" in svc.health.gauges
+
+
+def test_service_flush_emits_health_report_to_external_tracker():
+    ext = obs.InMemoryTracker()
+    model = dpp.random_kron(jax.random.PRNGKey(0), (4, 5)).rescale(4.0)
+    svc = model.service(seed=0, tracker=ext)
+    svc.sample(3)
+    reports = [e for e in ext.events if e["name"] == "health.report"]
+    assert len(reports) == 1 and reports[0]["component"] == "sampling"
+    # the bounded per-service accumulator never stores health events
+    assert all(e["name"] != "health.report" for e in svc._metrics.events)
+
+
+def test_detached_service_stats_health_is_healthy():
+    from repro.sampling.service import ServiceStats
+    assert ServiceStats().health == "healthy"
+    assert "health" not in ServiceStats()()         # not a counter
