@@ -66,6 +66,13 @@ GATED = {
         "row_key": "workload",
         "metrics": (("local_per_sec", True), ("mesh_per_sec", True)),
     },
+    # latency percentiles are too machine-sensitive to ratchet; the gate
+    # holds the serving tier's throughput and its coalescing claim
+    # (requested rows per device call must stay > 1 by a wide margin)
+    "serving_load": {
+        "row_key": "offered_rps",
+        "metrics": (("samples_per_s", True), ("rows_per_call", True)),
+    },
 }
 
 

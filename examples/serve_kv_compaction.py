@@ -1,23 +1,30 @@
-"""Serve a small model with batched requests + DPP KV-cache compaction:
-after prefill, the cache is compacted to a diversity-preserving subset
-(Diversity Networks [26] applied to tokens) before decode continues.
-Compaction here uses the *exact* k-DPP sampler from the batched
-machinery behind the ``repro.dpp`` facade (method="sample") rather than the
-deterministic greedy MAP, de-biasing eviction across heads.
+"""Serve a small model under traffic: two concurrent decode streams whose
+DPP KV-cache compactions coalesce through the async serving tier.
+
+Each stream prefills, submits every layer's kv-heads to a shared
+``repro.serving.KVCompactionClient`` (exact k-DPP eviction,
+Diversity-Networks [26] applied to cached tokens), and decodes on the
+compacted cache. The client's background flush thread batches both
+streams' heads into ONE device call per flush window — check the
+``device_calls`` line — and emits each request's ``queue-wait → coalesce
+→ device-call → scatter`` span tree, tenant-tagged, into the run log.
+The per-tenant latency breakdown at the end is rendered straight off
+that log by ``repro.obs.report``.
 
     PYTHONPATH=src python examples/serve_kv_compaction.py
 """
 
-import dataclasses
+import tempfile
+import threading
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import smoke_config
 from repro.models import LM
-from repro.models.transformer import DecodeState
-from repro.serve import ServeEngine, compact_kv_cache
+from repro.serve import ServeEngine
+from repro.serving import KVCompactionClient, ServingConfig
 
 cfg = smoke_config("qwen2-0.5b")
 lm = LM(cfg)
@@ -25,47 +32,58 @@ params = lm.init_params(jax.random.PRNGKey(0))
 engine = ServeEngine(lm, params, temperature=0.0)
 
 rng = np.random.default_rng(0)
-B, S = 4, 48
+B, S, BUDGET, MAX_NEW = 4, 48, 24, 12
 prompts = rng.integers(0, cfg.vocab, (B, S), dtype=np.int32)
 
 # --- plain generation -------------------------------------------------------
-out = engine.generate(prompts, 12)
-print(f"plain decode:     tokens {out['tokens'].shape}, "
+out = engine.generate(prompts, MAX_NEW)
+print(f"plain decode:       tokens {out['tokens'].shape}, "
       f"{out['decode_tok_per_s']:.0f} tok/s")
 
-# --- with KV compaction between prefill and decode --------------------------
-logits, state = jax.jit(lm.prefill)(params, jnp.asarray(prompts))
-budget = 24
+# --- inline compaction (single stream, engine-owned keys) -------------------
+out = engine.generate(prompts, MAX_NEW, kv_budget=BUDGET, kv_recency=8)
+print(f"compacted decode:   cache {S} -> {BUDGET} slots/layer, "
+      f"tokens {out['tokens'].shape}, compact {out['compact_s']:.2f}s")
 
-from repro.models.attention import KVCache
+# --- two concurrent streams through the async tier --------------------------
+run_log = tempfile.NamedTemporaryFile(suffix=".jsonl", delete=False).name
+obs.configure(jsonl=run_log)
 
-caches = state.caches
-ckey = jax.random.PRNGKey(42)
-new_head = {}
-for name, c in caches["head"].items():
-    if isinstance(c, KVCache):
-        ks, vs, pos = [], [], c.pos
-        for u in range(c.k.shape[0]):
-            ckey, sub = jax.random.split(ckey)
-            nc, _ = compact_kv_cache(
-                KVCache(c.k[u], c.v[u], c.pos[u]), budget, recency=8,
-                method="sample", key=sub)
-            ks.append(nc.k)
-            vs.append(nc.v)
-        new_head[name] = KVCache(jnp.stack(ks), jnp.stack(vs), c.pos)
-    else:
-        new_head[name] = c
-state_c = DecodeState({"head": new_head}, state.cross, state.enc_out)
+client = KVCompactionClient(
+    BUDGET, recency=8,
+    config=ServingConfig(max_batch=64, deadline_ms=10.0),
+    tenants={"interactive": 2, "batch": 1}, seed=0)
 
-tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-dec = jax.jit(lm.decode_step)
-outs = []
-for _ in range(12):
-    lg, state_c = dec(params, tok, state_c)
-    tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
-    outs.append(np.asarray(tok[:, 0]))
-print(f"compacted decode: cache {S} -> {budget} slots/layer; "
-      f"generated {np.stack(outs, 1).shape} tokens")
-print("note: compaction keeps a diverse + recent token subset per kv-head "
-      "(exact k-DPP sample via repro.dpp.functional; method='map' gives "
-      "the deterministic greedy_map Pallas-kernel path)")
+results = {}
+
+
+def stream(tenant: str, seed: int):
+    srng = np.random.default_rng(seed)
+    p = srng.integers(0, cfg.vocab, (B, S), dtype=np.int32)
+    results[tenant] = engine.generate(p, MAX_NEW, kv_client=client,
+                                      kv_tenant=tenant)
+
+
+threads = [threading.Thread(target=stream, args=("interactive", 1)),
+           threading.Thread(target=stream, args=("batch", 2))]
+for t in threads:
+    t.start()
+for t in threads:
+    t.join()
+client.close()
+obs.configure()   # detach the jsonl sink before reading it
+
+m = client._metrics
+print(f"two async streams:  device_calls="
+      f"{int(m.counter_value('serving.device_calls'))} for "
+      f"{int(m.counter_value('serving.heads_selected'))} kv-heads across "
+      f"both tenants (coalesced), per-tenant {client.per_tenant()}")
+for tenant, res in results.items():
+    print(f"  {tenant:12s} tokens {res['tokens'].shape}, "
+          f"compact {res['compact_s']:.2f}s")
+
+# --- per-tenant span breakdown off the run log ------------------------------
+print("\nrepro.obs.report — slowest request traces "
+      "(spans are tenant-tagged):")
+from repro.obs import report
+report.main([run_log, "--traces", "2", "--top", "6"])

@@ -220,6 +220,16 @@ class DPPModel:
         ``runtime=Mesh(...)`` to shard every flush over a mesh."""
         return SamplingService(self, **kwargs)
 
+    def serving(self, config=None, **kwargs):
+        """The async continuous-batching tier over this model
+        (``repro.serving.AsyncSamplingService``): background deadline/
+        max-batch flush thread, multi-tenant weighted-round-robin queues
+        with admission control, futures tickets. Draws are keyed by
+        (tenant, sequence number), so they are reproducible regardless of
+        how the background thread coalesces traffic."""
+        from ..serving import AsyncSamplingService
+        return AsyncSamplingService(self, config, **kwargs)
+
     # -- likelihood ---------------------------------------------------------
     def log_prob(self, batch: SubsetBatch,
                  cache: Optional[SpectralCache] = None) -> jax.Array:

@@ -290,6 +290,35 @@ def sample_krondpp_batched(key: jax.Array, spectrum: FactorSpectrum,
     return _sample_batched(keys, lams, vecs, int(k_max), backend)
 
 
+def sample_krondpp_keyed(row_keys: jax.Array, spectrum: FactorSpectrum,
+                         k_max: Optional[int] = None,
+                         backend: Optional[str] = None, runtime=None
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``sample_krondpp_batched`` with the per-row PRNG keys supplied.
+
+    ``row_keys`` is a (num_samples, 2) uint32 key array; row i is drawn
+    from ``row_keys[i]`` alone, so the result for a given key does not
+    depend on which other keys share the device call. This is the
+    batching-invariance primitive the async serving tier builds on: a
+    request keyed by (tenant, sequence number) draws the same subsets
+    whether the background flush coalesced it with 0 or 63 neighbours.
+
+    Same return contract as ``sample_krondpp_batched``:
+    (picks (num_samples, k_max) int32 with -1 padding, counts
+    (num_samples,) int32, truncated (num_samples,) bool).
+    """
+    if k_max is None:
+        k_max = spectrum.suggested_k_max()
+    lams, vecs = tuple(spectrum.lams), tuple(spectrum.vecs)
+    if runtime is not None and getattr(runtime, "is_mesh", False):
+        return runtime.map_keys(
+            lambda ks, ops: _sample_batched(ks, ops[0], ops[1],
+                                            int(k_max), backend),
+            row_keys, operands=(lams, vecs),
+            static_key=("sample_krondpp_batched", int(k_max), backend))
+    return _sample_batched(row_keys, lams, vecs, int(k_max), backend)
+
+
 def picks_to_lists(picks):
     """(B, k_max) padded device picks -> python lists (host boundary)."""
     import numpy as np

@@ -15,19 +15,30 @@ request sizes drift.
 Determinism: the service owns a PRNG key seeded at construction and splits
 it once per device call, so a fixed seed and submission order reproduces
 every sample exactly (the property the resumable data pipeline relies on).
+
+Thread-safety: one re-entrant lock guards the pending queue, the PRNG
+split, and every counter bump, so any number of threads may
+``submit()``/``flush()``/``result()`` concurrently — a flush coalesces
+whatever is pending at the instant it takes the lock, and a ticket
+resolved by another thread's flush never double-draws. The async
+continuous-batching tier (``repro.serving``) shares a service on exactly
+this contract.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from typing import List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
 from ..core.krondpp import KronDPP
-from .batched import picks_to_lists, sample_krondpp_batched
+from .batched import (picks_to_lists, sample_krondpp_batched,
+                      sample_krondpp_keyed)
 from .kdpp import sample_kdpp_batched
 from .spectral import SpectralCache, default_cache
 
@@ -199,6 +210,9 @@ class SamplingService:
         self.max_batch = int(max_batch)
         self._key = jax.random.PRNGKey(seed)
         self._pending: List[SampleTicket] = []
+        # guards _pending, _key, and flush/draw critical sections; RLock so
+        # result() -> flush() composes with callers already holding it
+        self._lock = threading.RLock()
         self._metrics = obs.InMemoryTracker()
         self._tracker = tracker
         self.stats = ServiceStats(self._metrics)
@@ -230,7 +244,8 @@ class SamplingService:
         if num_samples <= 0:
             raise ValueError("num_samples must be positive")
         t = SampleTicket(self, num_samples)
-        self._pending.append(t)
+        with self._lock:
+            self._pending.append(t)
         self.tracker.counter("service.samples_requested", num_samples)
         return t
 
@@ -245,17 +260,18 @@ class SamplingService:
         drawn: List[List[int]] = []
         remaining = self._round_up(num_samples)
         tr = self.tracker
-        while len(drawn) < num_samples:
-            batch = min(remaining, self.max_batch)
-            self._key, sub = jax.random.split(self._key)
-            with tr.timer("service.device_call_s", kind="kdpp"):
-                picks = sample_kdpp_batched(sub, self.spectrum, k, batch,
-                                            runtime=self.runtime)
-                rows = picks_to_lists(picks)
-            tr.counter("service.device_calls")
-            tr.counter("service.samples_drawn", batch)
-            drawn.extend(rows)
-            remaining -= batch
+        with self._lock:
+            while len(drawn) < num_samples:
+                batch = min(remaining, self.max_batch)
+                self._key, sub = jax.random.split(self._key)
+                with tr.timer("service.device_call_s", kind="kdpp"):
+                    picks = sample_kdpp_batched(sub, self.spectrum, k, batch,
+                                                runtime=self.runtime)
+                    rows = picks_to_lists(picks)
+                tr.counter("service.device_calls")
+                tr.counter("service.samples_drawn", batch)
+                drawn.extend(rows)
+                remaining -= batch
         return drawn[:num_samples]
 
     # -- batching core ------------------------------------------------------
@@ -284,7 +300,15 @@ class SamplingService:
         device loop, so spans emitted inside (``runtime.mesh.map_keys``,
         ``spectral_cache.eigh``) nest under a real request trace; the
         other tickets get equivalent synthesized device-call spans.
+
+        Thread-safe: the whole flush runs under the service lock, so a
+        concurrent ``result()`` caller either performs the flush itself or
+        blocks until this one has resolved its ticket.
         """
+        with self._lock:
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
         if not self._pending:
             return
         tickets = list(self._pending)
@@ -360,28 +384,88 @@ class SamplingService:
 
     def _emit_request_spans(self, ext, tickets, carrier, w0, t0, t1, t2, t3
                             ) -> None:
-        """Synthesize each ticket's span tree after a coalesced flush:
-        the flush phases were timed once on the monotonic clock
-        (t0 start → t1 coalesced → t2 device done → t3 scattered) and are
-        replicated into every ticket's trace, mapped onto the wall clock
-        via the flush anchor (w0 ↔ t0). The carrier's device-call span
-        was already emitted live."""
-        def wall(t):
-            return w0 + (t - t0)
+        emit_flush_spans(ext, tickets, carrier, w0, t0, t1, t2, t3)
 
-        for t in tickets:
-            kw = dict(trace_id=t.trace_id, parent_id=t._span_id)
-            obs.spans.emit_span(ext, "queue-wait", ts=t._submitted_ts,
-                                dur_s=max(t0 - t._submitted, 0.0), **kw)
-            obs.spans.emit_span(ext, "coalesce", ts=wall(t0), dur_s=t1 - t0,
-                                tickets=len(tickets), **kw)
-            if t is not carrier:
-                obs.spans.emit_span(ext, "device-call", ts=wall(t1),
-                                    dur_s=t2 - t1, kind="dpp", **kw)
-            obs.spans.emit_span(ext, "scatter", ts=wall(t2), dur_s=t3 - t2,
-                                **kw)
-            obs.spans.emit_span(ext, "service.request", trace_id=t.trace_id,
-                                span_id=t._span_id, parent_id=None,
-                                ts=t._submitted_ts,
-                                dur_s=max(wall(t3) - t._submitted_ts, 0.0),
-                                num_samples=t.num_samples)
+    # -- keyed draws (batching-invariant; the async tier's entry point) -----
+    def draw_keyed(self, row_keys) -> "tuple":
+        """Draw one subset per explicit PRNG key, chunked at max_batch.
+
+        Unlike ``flush()``, which splits the service key once per device
+        call (draws depend on coalescing), every row here is a pure
+        function of its own key — the determinism contract the async
+        serving tier needs under a nondeterministically-timed background
+        flush. Updates the shared ``service.*`` counters (device_calls,
+        samples_drawn, truncations, device_call_s) so ``stats`` aggregates
+        sync and async traffic in one place.
+
+        Returns ``(rows, truncations, collapsed)`` where rows is a list of
+        index lists (one per key, in key order), and the counts cover this
+        call only. Thread-safe; does not touch the pending queue.
+        """
+        row_keys = jnp.asarray(row_keys)
+        n = int(row_keys.shape[0])
+        tr = self.tracker
+        rows: List[List[int]] = []
+        truncations = 0
+        collapsed = 0
+        with self._lock:
+            for off in range(0, n, self.max_batch):
+                chunk = row_keys[off: off + self.max_batch]
+                with tr.timer("service.device_call_s", kind="dpp"):
+                    picks, counts, truncated = sample_krondpp_keyed(
+                        chunk, self.spectrum, self.k_max,
+                        runtime=self.runtime)
+                    part = picks_to_lists(picks)
+                tr.counter("service.device_calls")
+                tr.counter("service.samples_drawn", int(chunk.shape[0]))
+                n_trunc = int(truncated.sum())
+                tr.counter("service.truncations", n_trunc)
+                truncations += n_trunc
+                want = np.asarray(counts)
+                collapsed += sum(1 for r, w in zip(part, want)
+                                 if len(r) < int(w))
+                rows.extend(part)
+            m = self._metrics
+            tr.gauge("service.truncation_rate",
+                     m.counter_value("service.truncations")
+                     / max(1, m.counter_value("service.samples_drawn")))
+        return rows, truncations, collapsed
+
+
+def emit_flush_spans(ext, tickets, carrier, w0, t0, t1, t2, t3,
+                     kind: str = "dpp") -> None:
+    """Synthesize each ticket's span tree after a coalesced flush.
+
+    The flush phases were timed once on the monotonic clock (t0 start →
+    t1 coalesced → t2 device done → t3 scattered) and are replicated into
+    every ticket's trace, mapped onto the wall clock via the flush anchor
+    (w0 ↔ t0). The carrier's device-call span must already have been
+    emitted live by the flusher, parented on
+    ``(carrier.trace_id, carrier._span_id)`` — the documented thread-hop
+    mechanism — so this helper works identically from the submitting
+    thread (sync ``flush()``) and from the ``repro.serving`` background
+    flush thread.
+
+    Tickets may expose ``span_tags`` (a dict); the async tier uses it to
+    stamp ``tenant=`` on every span of a request's tree.
+    """
+    def wall(t):
+        return w0 + (t - t0)
+
+    for t in tickets:
+        tags = dict(getattr(t, "span_tags", None) or {})
+        kw = dict(trace_id=t.trace_id, parent_id=t._span_id, **tags)
+        obs.spans.emit_span(ext, "queue-wait", ts=t._submitted_ts,
+                            dur_s=max(t0 - t._submitted, 0.0), **kw)
+        obs.spans.emit_span(ext, "coalesce", ts=wall(t0), dur_s=t1 - t0,
+                            tickets=len(tickets), **kw)
+        if t is not carrier:
+            obs.spans.emit_span(ext, "device-call", ts=wall(t1),
+                                dur_s=t2 - t1, kind=kind, **kw)
+        obs.spans.emit_span(ext, "scatter", ts=wall(t2), dur_s=t3 - t2,
+                            **kw)
+        obs.spans.emit_span(ext, "service.request", trace_id=t.trace_id,
+                            span_id=t._span_id, parent_id=None,
+                            ts=t._submitted_ts,
+                            dur_s=max(wall(t3) - t._submitted_ts, 0.0),
+                            num_samples=t.num_samples, **tags)

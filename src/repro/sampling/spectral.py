@@ -17,6 +17,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
+import threading
 from typing import Optional, Tuple
 
 import jax
@@ -117,7 +118,13 @@ class SpectralCache:
     """LRU cache of per-factor eigendecompositions, keyed on array identity.
 
     ``spectrum(dpp)`` looks up each factor independently, so hits/misses
-    count factor lookups (a 2-factor KronDPP costs two lookups)."""
+    count factor lookups (a 2-factor KronDPP costs two lookups).
+
+    Thread-safe: one lock guards the LRU map and the hit/miss/eviction
+    counters — the serving tier's background flush thread and foreground
+    fitters race on the default shared cache. A miss holds the lock
+    across its ``eigh`` too, so concurrent lookups of the same factor
+    decompose it once, not once per thread."""
 
     def __init__(self, maxsize: int = 16):
         self.maxsize = maxsize
@@ -125,9 +132,11 @@ class SpectralCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     @property
     def stats(self) -> "_CacheStats":
@@ -142,43 +151,47 @@ class SpectralCache:
         and every lookup also emits ``spectral_cache.hits`` / ``.misses``
         / ``.evictions`` counters plus a ``spectral_cache.eigh_s`` wall-
         time sample through ``repro.obs.current_tracker()``."""
-        return _CacheStats(hits=self.hits, misses=self.misses,
-                           evictions=self.evictions,
-                           size=len(self._entries))
+        with self._lock:
+            return _CacheStats(hits=self.hits, misses=self.misses,
+                               evictions=self.evictions,
+                               size=len(self._entries))
 
     def clear(self) -> None:
-        self._entries.clear()
+        with self._lock:
+            self._entries.clear()
 
     def _factor(self, f: jax.Array) -> Tuple[jax.Array, jax.Array]:
         tracker = obs.current_tracker()
         key = (id(f), tuple(f.shape), str(f.dtype))
-        hit = self._entries.get(key)
-        if hit is not None:
-            self.hits += 1
-            tracker.counter("spectral_cache.hits")
-            self._entries.move_to_end(key)
-            return hit[1], hit[2]
-        self.misses += 1
-        tracker.counter("spectral_cache.misses")
-        if obs.enabled(tracker):
-            # the block_until_ready exists only to make the eigh timer an
-            # honest wall-clock sample; the NullTracker path keeps jax's
-            # normal async dispatch. The span makes the recompute show up
-            # INSIDE whatever request trace paid for the cache miss.
-            with obs.spans.start_span("spectral_cache.eigh", tracker=tracker,
-                                      n=int(f.shape[0])):
-                with tracker.timer("spectral_cache.eigh_s",
-                                   n=int(f.shape[0])):
-                    lam, vec = jax.block_until_ready(jnp.linalg.eigh(f))
-        else:
-            lam, vec = jnp.linalg.eigh(f)
-        lam = jnp.maximum(lam, 0.0)
-        self._entries[key] = (f, lam, vec)   # strong ref pins the id
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
-            self.evictions += 1
-            tracker.counter("spectral_cache.evictions")
-        return lam, vec
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                self.hits += 1
+                tracker.counter("spectral_cache.hits")
+                self._entries.move_to_end(key)
+                return hit[1], hit[2]
+            self.misses += 1
+            tracker.counter("spectral_cache.misses")
+            if obs.enabled(tracker):
+                # the block_until_ready exists only to make the eigh timer
+                # an honest wall-clock sample; the NullTracker path keeps
+                # jax's normal async dispatch. The span makes the recompute
+                # show up INSIDE whatever request trace paid for the miss.
+                with obs.spans.start_span("spectral_cache.eigh",
+                                          tracker=tracker,
+                                          n=int(f.shape[0])):
+                    with tracker.timer("spectral_cache.eigh_s",
+                                       n=int(f.shape[0])):
+                        lam, vec = jax.block_until_ready(jnp.linalg.eigh(f))
+            else:
+                lam, vec = jnp.linalg.eigh(f)
+            lam = jnp.maximum(lam, 0.0)
+            self._entries[key] = (f, lam, vec)   # strong ref pins the id
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+                tracker.counter("spectral_cache.evictions")
+            return lam, vec
 
     def spectrum(self, dpp: KronDPP) -> FactorSpectrum:
         """FactorSpectrum for a KronDPP — O(sum N_i^3) on miss, O(1) on hit."""

@@ -1,5 +1,12 @@
 """Serving engine: batched prefill + decode loop with optional DPP KV
-compaction, greedy/temperature sampling, and per-request bookkeeping."""
+compaction, greedy/temperature sampling, and per-request bookkeeping.
+
+KV compaction (``compact_kv`` / ``generate(kv_budget=...)``) has two
+paths: inline (this engine draws its own PRNG keys and compacts each
+cache tensor in its own device calls) and coalesced — pass a
+``repro.serving.KVCompactionClient`` and every layer's heads are
+submitted as async tickets, so concurrent decode streams compacting at
+the same moment share one k-DPP device call per flush."""
 
 from __future__ import annotations
 
@@ -35,10 +42,130 @@ class ServeEngine:
         return jax.random.categorical(
             sub, logits / self.temperature, axis=-1).astype(jnp.int32)
 
+    def compact_kv(self, state, budget: Optional[int] = None,
+                   recency: int = 8, method: str = "sample",
+                   client=None, tenant: str = "default",
+                   timeout: float = 120.0):
+        """Compact every self-attention KV cache in ``state`` to ``budget``
+        diverse + recent token slots (Diversity-Networks eviction).
+
+        Inline path (``client=None``): each cache tensor is compacted via
+        ``kv_compaction.compact_kv_cache`` with engine-owned PRNG keys.
+
+        Coalesced path: pass a ``repro.serving.KVCompactionClient`` — the
+        heads of every layer are submitted as async tickets (tagged
+        ``tenant=``) and this call blocks on the resolved picks, so
+        concurrent decode streams share device calls. The client's static
+        ``budget``/``recency`` are authoritative; passing conflicting
+        values raises instead of silently diverging.
+        """
+        from ..models.attention import KVCache
+        from ..models.transformer import DecodeState
+        from .kv_compaction import compact_kv_cache
+
+        if client is not None:
+            if budget is not None and budget != client.budget:
+                raise ValueError(
+                    f"budget {budget} conflicts with the client's static "
+                    f"budget {client.budget}")
+            budget = client.budget
+            recency = client.recency
+        elif budget is None:
+            raise ValueError("compact_kv needs a budget (or a client)")
+
+        def is_cache(x):
+            return isinstance(x, KVCache)
+
+        leaves, treedef = jax.tree_util.tree_flatten(state.caches,
+                                                     is_leaf=is_cache)
+        new_leaves: List = []
+        if client is not None:
+            # submit EVERY leaf first, then resolve — all layers of this
+            # stream ride one flush window and can coalesce with other
+            # streams' layers
+            tickets = []
+            for leaf in leaves:
+                if not is_cache(leaf):
+                    tickets.append(None)
+                    continue
+                k = leaf.k
+                if k.ndim == 5:       # stacked units: (U, B, S, KV, hd)
+                    U, B, S, KV, hd = k.shape
+                    heads = k.transpose(0, 1, 3, 2, 4).reshape(
+                        U * B * KV, S, hd)
+                    valid = jnp.repeat(
+                        jnp.asarray(leaf.pos, jnp.int32).reshape(U), B * KV)
+                else:                 # (B, S, KV, hd)
+                    B, S, KV, hd = k.shape
+                    heads = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+                    valid = jnp.full((B * KV,),
+                                     jnp.asarray(leaf.pos, jnp.int32))
+                tickets.append(client.submit(heads, valid_len=valid,
+                                             tenant=tenant))
+            for leaf, ticket in zip(leaves, tickets):
+                if ticket is None:
+                    new_leaves.append(leaf)
+                    continue
+                picks = ticket.result(timeout)          # (H, budget)
+                k = leaf.k
+                if k.ndim == 5:
+                    U, B, S, KV, hd = k.shape
+                    p = picks.reshape(U, B, KV, budget)
+
+                    def gather(arr, p=p):
+                        # (U, B, S, KV, hd) gathered along S (axis 2)
+                        return jnp.take_along_axis(
+                            arr, p.transpose(0, 1, 3, 2)[..., None], axis=2)
+                else:
+                    B, S, KV, hd = k.shape
+                    p = picks.reshape(B, KV, budget)
+
+                    def gather(arr, p=p):
+                        return jnp.take_along_axis(
+                            arr, p.transpose(0, 2, 1)[..., None], axis=1)
+                new_leaves.append(KVCache(k=gather(k), v=gather(leaf.v),
+                                          pos=leaf.pos))
+        else:
+            key = None
+            if method == "sample":
+                self._key, key = jax.random.split(self._key)
+            for leaf in leaves:
+                if not is_cache(leaf):
+                    new_leaves.append(leaf)
+                    continue
+                if leaf.k.ndim == 5:
+                    ks, vs = [], []
+                    for u in range(leaf.k.shape[0]):
+                        sub = None
+                        if key is not None:
+                            key, sub = jax.random.split(key)
+                        nc, _ = compact_kv_cache(
+                            KVCache(leaf.k[u], leaf.v[u], leaf.pos[u]),
+                            budget, recency, method, key=sub)
+                        ks.append(nc.k)
+                        vs.append(nc.v)
+                    new_leaves.append(KVCache(jnp.stack(ks), jnp.stack(vs),
+                                              leaf.pos))
+                else:
+                    sub = None
+                    if key is not None:
+                        key, sub = jax.random.split(key)
+                    nc, _ = compact_kv_cache(leaf, budget, recency, method,
+                                             key=sub)
+                    new_leaves.append(nc)
+        caches = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        return DecodeState(caches, state.cross, state.enc_out)
+
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  enc_embeds: Optional[np.ndarray] = None,
-                 stop_token: Optional[int] = None) -> Dict:
-        """prompts: (B, S_prompt) int32 -> dict with tokens + timing."""
+                 stop_token: Optional[int] = None,
+                 kv_budget: Optional[int] = None, kv_recency: int = 8,
+                 kv_method: str = "sample", kv_client=None,
+                 kv_tenant: str = "default") -> Dict:
+        """prompts: (B, S_prompt) int32 -> dict with tokens + timing.
+
+        ``kv_budget`` (or ``kv_client``) compacts the KV cache between
+        prefill and decode — see ``compact_kv``."""
         t0 = time.perf_counter()
         logits, state = self._prefill(self.params, jnp.asarray(prompts),
                                       *( [jnp.asarray(enc_embeds)]
@@ -46,6 +173,15 @@ class ServeEngine:
         tok = self._sample(logits[:, -1])
         jax.block_until_ready(tok)
         t_prefill = time.perf_counter() - t0
+
+        t_compact = 0.0
+        if kv_budget is not None or kv_client is not None:
+            tc = time.perf_counter()
+            state = self.compact_kv(state, kv_budget, kv_recency,
+                                    kv_method, client=kv_client,
+                                    tenant=kv_tenant)
+            jax.block_until_ready(state.caches)
+            t_compact = time.perf_counter() - tc
 
         out: List[jax.Array] = [tok]
         done = np.zeros(prompts.shape[0], bool)
@@ -63,6 +199,7 @@ class ServeEngine:
         tokens = np.stack([np.asarray(t) for t in out], axis=1)
         return {"tokens": tokens,
                 "prefill_s": t_prefill,
+                "compact_s": t_compact,
                 "decode_s": t_decode,
                 "decode_tok_per_s": tokens.shape[0] * tokens.shape[1]
                                     / max(t_decode, 1e-9)}

@@ -1,0 +1,54 @@
+"""repro.serving — async continuous-batching serving tier.
+
+The synchronous ``SamplingService`` (``repro.sampling.service``) is a
+coalescing engine whose flush the *caller* drives; this package puts a
+background thread in charge, which is what turns a sampler into a
+service:
+
+- **continuous batching** — a flush fires when pending rows reach
+  ``max_batch`` OR the oldest request ages past ``deadline_ms``,
+  whichever comes first, so a lone request pays bounded latency and a
+  busy service pays full occupancy;
+- **multi-tenant fairness** — per-tenant bounded FIFOs drained by
+  weighted round-robin; overflow fast-fails with a typed ``QueueFull``;
+- **futures tickets** — ``submit()`` returns immediately; ``result()``
+  blocks; resolution is safe from any thread;
+- **graceful shutdown** — ``close(drain=True)`` flushes stragglers,
+  ``drain=False`` cancels them with ``CancelledRequest``;
+- **determinism** — requests are PRNG-keyed by (tenant, sequence
+  number), not by flush composition, so a fixed seed + fixed per-tenant
+  submission order reproduces every sample bit-for-bit no matter how
+  the background thread batches the traffic;
+- **observability** — the flush thread emits the same per-request
+  ``queue-wait → coalesce → device-call → scatter`` span trees as the
+  sync path (explicit ``parent=`` thread hop, tenant-tagged), plus
+  ``serving.*`` metrics (deadline vs batch fires, queue depth,
+  admit/reject per tenant, occupancy, latency percentiles) and a
+  ``HealthMonitor`` verdict per flush.
+
+Module map
+----------
+queues.py   tenant state, typed rejections, WRR drain.
+batcher.py  ``ServingConfig`` + ``ContinuousBatcher`` (the flush thread)
+            + ``AsyncTicket`` futures.
+service.py  ``AsyncSamplingService`` — DPP draws; also via
+            ``model.serving(...)`` on any ``repro.dpp`` model.
+kv.py       ``KVCompactionClient`` — k-DPP KV compaction for concurrent
+            decode streams (one device call per coalesced flush).
+
+Benchmark: ``benchmarks/serving_load.py`` (Poisson arrivals, offered-load
+sweep, p50/p99/occupancy/truncation, gated by ``benchmarks/regression``).
+"""
+
+from .batcher import AsyncTicket, ContinuousBatcher, ServingConfig
+from .kv import KVCompactionClient
+from .queues import (CancelledRequest, QueueFull, RejectedRequest,
+                     ServiceClosed, parse_tenants)
+from .service import AsyncSamplingService, ServingStats
+
+__all__ = [
+    "AsyncSamplingService", "AsyncTicket", "ContinuousBatcher",
+    "KVCompactionClient", "ServingConfig", "ServingStats",
+    "RejectedRequest", "QueueFull", "ServiceClosed", "CancelledRequest",
+    "parse_tenants",
+]

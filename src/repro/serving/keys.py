@@ -1,0 +1,77 @@
+"""Per-request PRNG keying for the serving tier, batched per flush.
+
+The determinism contract: row ``j`` of the request with per-tenant
+sequence number ``seq`` from tenant ``T`` is always drawn from
+
+    fold_in(fold_in(fold_in(base_seed, crc32(T)), seq), j)
+
+— a pure function of (seed, tenant, seq, j), independent of how the
+background thread coalesced traffic. Deriving those keys one
+``fold_in`` at a time costs a host->device dispatch per request, which
+at load dwarfs the actual sampling call; ``TenantKeyring.row_keys``
+derives a whole flush's keys (pad rows included) in ONE vmapped jitted
+device call, compiled once per padded batch shape — the same O(log)
+shape set as the sampler itself.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def _fold_rows(tkeys, seqs, idx):
+    def one(tk, s, j):
+        return jax.random.fold_in(jax.random.fold_in(tk, s), j)
+    return jax.vmap(one)(tkeys, seqs, idx)
+
+
+class TenantKeyring:
+    """Derives (tenant, seq, row)-keyed PRNG keys for coalesced flushes.
+
+    Only the flush thread touches a keyring, so the tenant-key cache
+    needs no lock."""
+
+    def __init__(self, seed: int):
+        self._base = jax.random.PRNGKey(seed)
+        # reserved fold for pad rows (power-of-two round-up surplus):
+        # crc32 masks to 31 bits, so a real tenant tag can collide only
+        # with probability 2^-31 — and a collision would merely mean one
+        # discarded pad row repeating a request row's draw
+        self._pad = np.asarray(jax.random.fold_in(
+            jax.random.fold_in(self._base, 0x7FFFFFFF), 0x7FFFFFFF))
+        # tenant keys cached as HOST uint32 pairs: the per-flush key
+        # assembly is then pure numpy + one device transfer, keeping the
+        # flush thread's host time flat in the number of requests
+        self._tenant_keys: Dict[str, np.ndarray] = {}
+
+    def tenant_key(self, tenant: str) -> np.ndarray:
+        k = self._tenant_keys.get(tenant)
+        if k is None:
+            tag = zlib.crc32(tenant.encode("utf-8")) & 0x7FFFFFFF
+            k = np.asarray(jax.random.fold_in(self._base, tag))
+            self._tenant_keys[tenant] = k
+        return k
+
+    def row_keys(self, tickets: List, padded: int) -> jax.Array:
+        """(padded,) PRNG keys: every ticket's rows in ticket order, then
+        pad rows. One device call regardless of ticket count."""
+        tks = np.empty((padded,) + self._pad.shape, self._pad.dtype)
+        seqs = np.zeros((padded,), np.uint32)
+        idx = np.empty((padded,), np.uint32)
+        off = 0
+        for t in tickets:
+            n = t.num_samples
+            tks[off: off + n] = self.tenant_key(t.tenant)
+            seqs[off: off + n] = t.seq
+            idx[off: off + n] = np.arange(n, dtype=np.uint32)
+            off += n
+        tks[off:] = self._pad
+        idx[off:] = np.arange(padded - off, dtype=np.uint32)
+        return _fold_rows(jnp.asarray(tks), jnp.asarray(seqs),
+                          jnp.asarray(idx))

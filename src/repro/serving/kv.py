@@ -1,0 +1,159 @@
+"""Coalescing client for k-DPP KV-cache compaction under traffic.
+
+Concurrent decode streams each want "compact my cache's heads, now"; each
+head's selection is an independent k-DPP draw over that head's key
+vectors. ``KVCompactionClient`` batches them: streams submit their heads
+as ``(H, S, d)`` stacks, the background flush thread groups whatever is
+pending by static shape ``(S, d)`` and runs ONE jitted vmapped
+``dpp_select_tokens(method="sample")`` call per group — so two decode
+streams compacting at the same moment pay one device call, not two.
+
+PRNG keying matches ``AsyncSamplingService``: per-request keys are
+``fold_in(fold_in(base, crc32(tenant)), tenant_seq)`` split per head, so
+picks are reproducible regardless of which streams happened to coalesce.
+
+Tickets resolve to the sorted kept positions, shape ``(H, budget)``
+int32 — the caller owns the gather (``ServeEngine.compact_kv`` does the
+``take_along_axis`` and cache rebuild host-side).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import obs
+from ..sampling.service import emit_flush_spans
+from ..serve.kv_compaction import dpp_select_tokens
+from .batcher import AsyncTicket, ContinuousBatcher, ServingConfig
+from .keys import TenantKeyring
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "recency"))
+def _select_heads(keys, valid, rkeys, budget, recency):
+    """One device call: an exact k-DPP token selection per head.
+
+    keys (H, S, d), valid (H,) int32, rkeys (H,) PRNG keys ->
+    picks (H, budget) int32 (sorted kept positions per head)."""
+    def one(kh, vl, rk):
+        return dpp_select_tokens(kh, budget, recency, valid_len=vl,
+                                 method="sample", key=rk)
+    return jax.vmap(one)(keys, valid, rkeys)
+
+
+def _next_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class KVCompactionClient(ContinuousBatcher):
+    """Multi-stream k-DPP KV-compaction coalescer.
+
+    ``budget``/``recency`` are client-level statics (one compiled
+    executable per distinct ``(S, d)`` head shape and padded head count).
+    Submit one ticket per cache tensor — all its heads ride together —
+    and gather with the resolved ``(H, budget)`` positions.
+    """
+
+    def __init__(self, budget: int, recency: int = 0,
+                 config: Optional[ServingConfig] = None, *, tenants=None,
+                 seed: int = 0, tracker=None):
+        super().__init__(config, tenants=tenants, tracker=tracker,
+                         thread_name="repro-serving-kv")
+        if budget <= recency:
+            raise ValueError("budget must exceed recency")
+        self.budget = int(budget)
+        self.recency = int(recency)
+        self._keyring = TenantKeyring(seed)
+
+    # -- request path -------------------------------------------------------
+    def submit(self, keys, valid_len=None, tenant: str = "default"
+               ) -> AsyncTicket:
+        """Enqueue one cache tensor's heads: ``keys`` (H, S, d), optional
+        ``valid_len`` (scalar or (H,)) marking how much of S is real.
+        The ticket resolves to (H, budget) sorted kept positions."""
+        keys = jnp.asarray(keys)
+        if keys.ndim != 3:
+            raise ValueError(f"expected stacked heads (H, S, d), got shape "
+                             f"{keys.shape}")
+        H, S, _ = keys.shape
+        if valid_len is None:
+            valid = jnp.full((H,), S, jnp.int32)
+        else:
+            valid = jnp.broadcast_to(
+                jnp.asarray(valid_len, jnp.int32), (H,))
+        t = AsyncTicket(tenant, num_samples=int(H),
+                        payload=(keys, valid))
+        return self._enqueue(t)
+
+    # -- background flush ---------------------------------------------------
+    def _flush(self, batch: List[AsyncTicket], trigger: str) -> None:
+        tr = self.tracker
+        ext = self._external_tracker()
+        span_ext = ext if obs.enabled(ext) else None
+        # heads are only batchable at identical static (S, d); group, one
+        # device call per group. Under homogeneous traffic (the common
+        # case: same model, same cache shape) this is exactly one call.
+        groups: "Dict[tuple, List[AsyncTicket]]" = {}
+        for t in batch:
+            groups.setdefault(tuple(t.payload[0].shape[1:]), []).append(t)
+        tr.gauge("serving.shape_groups", len(groups))
+        for tickets in groups.values():
+            self._flush_group(tickets, trigger, tr, span_ext)
+
+    def _flush_group(self, tickets, trigger, tr, span_ext) -> None:
+        t0 = time.perf_counter()
+        w0 = time.time()
+        total = sum(t.num_samples for t in tickets)
+        padded = _next_pow2(total)
+        keys = [t.payload[0] for t in tickets]
+        valid = [t.payload[1] for t in tickets]
+        if padded > total:
+            S, d = keys[0].shape[1:]
+            pad = padded - total
+            # zero pad-keys give a near-identity kernel; the rows are
+            # computed and discarded, they exist only to keep the set of
+            # compiled head counts at O(log) like the sampling tier
+            keys.append(jnp.zeros((pad, S, d), keys[0].dtype))
+            valid.append(jnp.full((pad,), S, jnp.int32))
+        keys = jnp.concatenate(keys, axis=0)
+        valid = jnp.concatenate(valid, axis=0)
+        rkeys = self._keyring.row_keys(tickets, padded)
+        t1 = time.perf_counter()
+        carrier = tickets[0]
+        live = obs.spans.NULL_SPAN if span_ext is None else \
+            obs.spans.start_span("device-call", tracker=span_ext,
+                                 parent=(carrier.trace_id,
+                                         carrier._span_id),
+                                 kind="kv-compaction", batch=padded,
+                                 trigger=trigger, tenant=carrier.tenant)
+        with live:
+            with tr.timer("serving.device_call_s", kind="kv"):
+                picks = jax.block_until_ready(_select_heads(
+                    keys, valid, rkeys, self.budget, self.recency))
+        tr.counter("serving.device_calls")
+        tr.counter("serving.heads_selected", total)
+        t2 = time.perf_counter()
+        off = 0
+        for t in tickets:
+            t._resolve(picks[off: off + t.num_samples])
+            off += t.num_samples
+        t3 = time.perf_counter()
+        for t in tickets:
+            tr.observe("serving.latency_s", t3 - t._submitted,
+                       tenant=t.tenant)
+            tr.observe("serving.queue_wait_s", t0 - t._submitted,
+                       tenant=t.tenant)
+        tr.gauge("serving.batch_occupancy", total / max(1, padded))
+        tr.gauge("serving.requests_per_flush", len(tickets))
+        tr.observe("serving.flush_s", t3 - t0, trigger=trigger,
+                   tickets=len(tickets))
+        if span_ext is not None:
+            emit_flush_spans(span_ext, tickets, carrier, w0, t0, t1, t2, t3,
+                             kind="kv-compaction")

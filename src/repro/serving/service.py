@@ -1,0 +1,181 @@
+"""Async continuous-batching front-end for DPP sampling.
+
+``AsyncSamplingService`` is the serving tier over a (now thread-safe)
+``SamplingService``: callers on any thread ``submit(n, tenant=...)`` and
+get a futures ticket; the background flush thread coalesces whatever is
+queued — across tenants, weighted round-robin — into one padded device
+call when the batch fills or the deadline expires.
+
+Determinism under async batching
+--------------------------------
+The synchronous service splits its PRNG key once per device call, so its
+draws depend on how requests coalesced — acceptable when the caller
+controls flush timing, unacceptable when a background thread does. Here
+row ``j`` of a request is keyed by ``(base_seed, tenant, tenant_seq, j)``
+(see ``keys.TenantKeyring``) and drawn through the batching-invariant
+``SamplingService.draw_keyed`` path, so a fixed seed and fixed per-tenant
+submission order reproduces every sample bit-for-bit no matter how the
+flush thread sliced the traffic (deadline fires, batch fires, thread
+scheduling — all irrelevant to the values drawn).
+
+Observability
+-------------
+Each flush emits the same per-ticket span trees as the sync path (root
+``service.request``, children ``queue-wait → coalesce → device-call →
+scatter``; carrier's device-call live, via the explicit ``parent=``
+thread-hop), tenant-tagged; ``serving.*`` metrics (admit/reject per
+tenant, deadline vs batch fires, queue depth, occupancy, latency
+percentiles); and a ``HealthMonitor`` verdict per flush through the
+shared service's sentinels.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+from .. import obs
+from ..sampling.service import SamplingService, emit_flush_spans
+from .batcher import AsyncTicket, ContinuousBatcher, ServingConfig
+from .keys import TenantKeyring
+
+
+class ServingStats:
+    """Live view over the batcher's ``serving.*`` counters, in the
+    ``ServiceStats`` style: attribute access, a ``stats()`` call returning
+    a plain dict, and latency percentile helpers."""
+
+    KEYS = ("flushes", "failed_flushes", "batch_fires", "deadline_fires",
+            "drain_fires", "admitted", "rejected", "cancelled")
+
+    def __init__(self, metrics: obs.InMemoryTracker):
+        self._metrics = metrics
+
+    def _value(self, key: str) -> int:
+        return int(self._metrics.counter_value(f"serving.{key}"))
+
+    def __call__(self) -> dict:
+        return {k: self._value(k) for k in self.KEYS}
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self.KEYS:
+            raise KeyError(key)
+        return self._value(key)
+
+    def keys(self):
+        return self.KEYS
+
+    def latency_percentile(self, p: float) -> float:
+        """p-th percentile of end-to-end request latency (seconds),
+        submit → resolve, over every resolved ticket."""
+        return self._metrics.percentile("serving.latency_s", p)
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self.latency_percentile(50)
+
+    @property
+    def p99_latency_s(self) -> float:
+        return self.latency_percentile(99)
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{k}={v}" for k, v in self().items())
+        return f"ServingStats({body})"
+
+
+for _key in ServingStats.KEYS:
+    setattr(ServingStats, _key,
+            property(lambda self, k=_key: self._value(k)))
+del _key
+
+
+class AsyncSamplingService(ContinuousBatcher):
+    """Async multi-tenant serving tier over one DPP kernel.
+
+    ``dpp`` is anything ``SamplingService`` accepts (a ``repro.dpp``
+    facade model or ``core.KronDPP``); pass ``service=`` instead to share
+    an existing (thread-safe) synchronous service — sync and async
+    traffic then aggregate in one ``service.stats``.
+
+    Usage::
+
+        svc = model.serving(ServingConfig(max_batch=64, deadline_ms=5.0),
+                            tenants={"interactive": 4, "batch": 1})
+        ticket = svc.submit(3, tenant="interactive")
+        rows = ticket.result(timeout=1.0)   # 3 subsets, index lists
+        svc.close()                          # drains, then joins
+    """
+
+    def __init__(self, dpp=None, config: Optional[ServingConfig] = None, *,
+                 service: Optional[SamplingService] = None, tenants=None,
+                 seed: int = 0, k_max: Optional[int] = None, cache=None,
+                 runtime=None, tracker=None):
+        super().__init__(config, tenants=tenants, tracker=tracker)
+        if service is not None:
+            self.service = service
+        elif dpp is not None:
+            self.service = SamplingService(
+                dpp, k_max=k_max, cache=cache, seed=seed,
+                max_batch=self.config.max_batch, runtime=runtime,
+                tracker=tracker)
+        else:
+            raise TypeError("AsyncSamplingService needs a dpp model or an "
+                            "existing service=")
+        self._keyring = TenantKeyring(seed)
+        self.stats = ServingStats(self._metrics)
+
+    # -- request path -------------------------------------------------------
+    def submit(self, num_samples: int, tenant: str = "default"
+               ) -> AsyncTicket:
+        """Enqueue; returns a futures ticket. Raises ``QueueFull`` /
+        ``ServiceClosed`` (typed, structured) instead of queuing into
+        unbounded latency."""
+        return self._enqueue(AsyncTicket(tenant, num_samples))
+
+    def sample(self, num_samples: int, tenant: str = "default",
+               timeout: Optional[float] = 60.0) -> List[List[int]]:
+        """submit + block: ``num_samples`` subsets as index lists."""
+        return self.submit(num_samples, tenant).result(timeout)
+
+    # -- background flush ---------------------------------------------------
+    def _flush(self, batch: List[AsyncTicket], trigger: str) -> None:
+        svc = self.service
+        tr = self.tracker
+        ext = self._external_tracker()
+        span_ext = ext if obs.enabled(ext) else None
+        t0 = time.perf_counter()
+        w0 = time.time()
+        total = sum(t.num_samples for t in batch)
+        padded = svc._round_up(total)
+        row_keys = self._keyring.row_keys(batch, padded)
+        t1 = time.perf_counter()
+        carrier = batch[0]
+        live = obs.spans.NULL_SPAN if span_ext is None else \
+            obs.spans.start_span("device-call", tracker=span_ext,
+                                 parent=(carrier.trace_id, carrier._span_id),
+                                 kind="dpp", batch=padded, trigger=trigger,
+                                 tenant=carrier.tenant)
+        with live:
+            rows, truncations, collapsed = svc.draw_keyed(row_keys)
+        t2 = time.perf_counter()
+        off = 0
+        for t in batch:
+            t._resolve(rows[off: off + t.num_samples])
+            off += t.num_samples
+        t3 = time.perf_counter()
+        for t in batch:
+            tr.observe("serving.latency_s", t3 - t._submitted,
+                       tenant=t.tenant)
+            tr.observe("serving.queue_wait_s", t0 - t._submitted,
+                       tenant=t.tenant)
+        # requested rows per padded row (utilization, <= 1) and requests
+        # per device call (coalescing, the "occupancy > 1" serving claim)
+        tr.gauge("serving.batch_occupancy", total / max(1, padded))
+        tr.gauge("serving.requests_per_flush", len(batch))
+        tr.observe("serving.flush_s", t3 - t0, trigger=trigger,
+                   tickets=len(batch))
+        svc.health.check_sampling(drawn=padded, truncated=truncations,
+                                  collapsed=collapsed)
+        if span_ext is not None:
+            svc.health.report(emit=True, tracker=span_ext)
+            emit_flush_spans(span_ext, batch, carrier, w0, t0, t1, t2, t3)

@@ -1,0 +1,595 @@
+"""repro.serving — async continuous-batching serving tier.
+
+Covers the batcher core (deadline vs batch vs drain triggers, WRR
+fairness, typed admission-control rejections, graceful shutdown), the
+determinism contract (fixed seed + fixed per-tenant submission order
+reproduces every sample bit-for-bit regardless of how the background
+thread coalesced traffic), span parity with the synchronous path, the
+KV-compaction coalescer, and the thread-safety satellites: concurrent
+submits against one synchronous ``SamplingService`` and a two-thread
+``SpectralCache`` hammer.
+
+Concurrency tests carry the ``threaded`` marker — CI re-runs just those
+under ``-W error`` so a race fails in its own job instead of flaking
+inside the tier-1 wall.
+"""
+
+import collections
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import dpp, obs
+from repro.sampling.service import SampleTicket, SamplingService
+from repro.sampling.spectral import SpectralCache
+from repro.serving import (AsyncSamplingService, AsyncTicket,
+                           CancelledRequest, ContinuousBatcher,
+                           KVCompactionClient, QueueFull, RejectedRequest,
+                           ServiceClosed, ServingConfig, parse_tenants)
+from repro.serving.queues import _TenantState, drain_weighted
+
+threaded = pytest.mark.threaded
+
+
+def _model():
+    return dpp.random_kron(jax.random.PRNGKey(0), (4, 5)).rescale(4.0)
+
+
+class _Req:
+    def __init__(self, n=1):
+        self.num_samples = n
+
+
+def _tenants(spec):
+    out = collections.OrderedDict()
+    for name, (weight, queued) in spec.items():
+        ts = _TenantState(name, weight)
+        for _ in range(queued):
+            ts.queue.append(_Req())
+        out[name] = ts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# queues: tenant parsing + weighted round-robin
+# ---------------------------------------------------------------------------
+
+def test_parse_tenants_accepts_every_spelling():
+    assert parse_tenants(None) == {}
+    assert parse_tenants(3) == {"t0": 1, "t1": 1, "t2": 1}
+    assert parse_tenants("a:2,b") == {"a": 2, "b": 1}
+    assert parse_tenants({"x": 4}) == {"x": 4}
+    assert parse_tenants(["p", "q"]) == {"p": 1, "q": 1}
+    with pytest.raises(ValueError):
+        parse_tenants("a:0")
+
+
+def test_drain_weighted_interleaves_by_weight():
+    tenants = _tenants({"heavy": (2, 6), "light": (1, 6)})
+    marks = {id(r): n for n, ts in tenants.items() for r in ts.queue}
+    batch = drain_weighted(tenants, budget_rows=6)
+    order = [marks[id(r)] for r in batch]
+    # weight-2 tenant gets two requests per WRR cycle, weight-1 gets one
+    assert order == ["heavy", "heavy", "light", "heavy", "heavy", "light"]
+
+
+def test_drain_weighted_never_starves_a_light_tenant():
+    tenants = _tenants({"heavy": (4, 50), "light": (1, 2)})
+    marks = {id(r): n for n, ts in tenants.items() for r in ts.queue}
+    batch = drain_weighted(tenants, budget_rows=10)
+    drained = [marks[id(r)] for r in batch]
+    # within the first WRR cycle (4 heavy + 1 light) the light tenant
+    # is already served — a saturating neighbor cannot starve it
+    assert "light" in drained[:5]
+
+
+def test_drain_weighted_stops_at_row_budget_without_splitting():
+    tenants = _tenants({"a": (1, 3)})
+    for req in list(tenants["a"].queue):
+        req.num_samples = 4
+    batch = drain_weighted(tenants, budget_rows=6)
+    # 4 rows < 6 budget -> take another whole request (8 total): requests
+    # never split, so the batch may overshoot the row budget
+    assert [t.num_samples for t in batch] == [4, 4]
+    assert len(tenants["a"].queue) == 1
+
+
+def test_serving_config_validation():
+    with pytest.raises(ValueError):
+        ServingConfig(max_batch=0)
+    with pytest.raises(ValueError):
+        ServingConfig(deadline_ms=0.0)
+    with pytest.raises(ValueError):
+        ServingConfig(max_queue_depth=0)
+    with pytest.raises(ValueError):
+        ServingConfig(default_weight=0)
+
+
+# ---------------------------------------------------------------------------
+# admission control: typed rejections
+# ---------------------------------------------------------------------------
+
+def test_queue_full_is_typed_and_structured():
+    # huge deadline + huge batch -> nothing fires, the queue holds
+    svc = AsyncSamplingService(
+        _model(), ServingConfig(max_batch=4096, deadline_ms=60_000.0,
+                                max_queue_depth=2))
+    try:
+        svc.submit(1, tenant="t")
+        svc.submit(1, tenant="t")
+        with pytest.raises(QueueFull) as exc:
+            svc.submit(1, tenant="t")
+        err = exc.value
+        assert isinstance(err, RejectedRequest)
+        assert err.reason == "queue_full"
+        assert err.tenant == "t"
+        assert err.depth == 2 and err.limit == 2
+        assert svc.stats.rejected == 1
+        assert svc.per_tenant()["t"]["rejected"] == 1
+    finally:
+        svc.close()
+
+
+def test_submit_after_close_raises_service_closed():
+    svc = AsyncSamplingService(_model(), ServingConfig())
+    svc.close()
+    with pytest.raises(ServiceClosed) as exc:
+        svc.submit(1, tenant="late")
+    assert exc.value.reason == "closed" and exc.value.tenant == "late"
+    svc.close()     # idempotent
+
+
+# ---------------------------------------------------------------------------
+# triggers: deadline, batch, drain, cancel
+# ---------------------------------------------------------------------------
+
+@threaded
+def test_deadline_fire_coalesces_concurrent_tenants():
+    svc = AsyncSamplingService(
+        _model(), ServingConfig(max_batch=4096, deadline_ms=30.0),
+        tenants={"a": 1, "b": 1})
+    try:
+        ta = svc.submit(3, tenant="a")
+        tb = svc.submit(2, tenant="b")
+        rows_a = ta.result(timeout=120.0)
+        rows_b = tb.result(timeout=120.0)
+        assert len(rows_a) == 3 and len(rows_b) == 2
+        assert all(isinstance(r, list) for r in rows_a + rows_b)
+        assert svc.stats.deadline_fires >= 1
+        assert svc.stats.batch_fires == 0
+        # both tenants' rows rode ONE padded device call
+        assert svc.service.stats.device_calls == 1
+    finally:
+        svc.close()
+
+
+@threaded
+def test_batch_fire_preempts_a_long_deadline():
+    svc = AsyncSamplingService(
+        _model(), ServingConfig(max_batch=4, deadline_ms=60_000.0))
+    try:
+        t0 = time.perf_counter()
+        tickets = [svc.submit(2) for _ in range(2)]    # 4 rows == max_batch
+        for t in tickets:
+            assert len(t.result(timeout=120.0)) == 2
+        # resolved far before the 60s deadline could have fired
+        assert time.perf_counter() - t0 < 60.0
+        assert svc.stats.batch_fires >= 1
+        assert svc.stats.deadline_fires == 0
+    finally:
+        svc.close()
+
+
+@threaded
+def test_close_drains_pending_tickets():
+    svc = AsyncSamplingService(
+        _model(), ServingConfig(max_batch=4096, deadline_ms=60_000.0))
+    t = svc.submit(2)
+    svc.close(drain=True)
+    assert len(t.result(timeout=1.0)) == 2
+    assert svc.stats.drain_fires >= 1
+
+
+@threaded
+def test_close_without_drain_cancels_queued_tickets():
+    svc = AsyncSamplingService(
+        _model(), ServingConfig(max_batch=4096, deadline_ms=60_000.0),
+        tenants={"a": 1})
+    t = svc.submit(2, tenant="a")
+    svc.close(drain=False)
+    with pytest.raises(CancelledRequest) as exc:
+        t.result(timeout=1.0)
+    assert exc.value.reason == "cancelled" and exc.value.tenant == "a"
+    assert svc.stats.cancelled == 1
+
+
+@threaded
+def test_flush_error_fails_its_batch_and_the_loop_keeps_serving():
+    svc = AsyncSamplingService(
+        _model(), ServingConfig(max_batch=4096, deadline_ms=20.0))
+    try:
+        real = svc.service.draw_keyed
+        calls = {"n": 0}
+
+        def flaky(row_keys):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("injected device failure")
+            return real(row_keys)
+
+        svc.service.draw_keyed = flaky
+        bad = svc.submit(2)
+        with pytest.raises(RuntimeError, match="injected device failure"):
+            bad.result(timeout=120.0)
+        assert svc.stats.failed_flushes == 1
+        # the flush thread survived the failure and serves new traffic
+        assert len(svc.sample(3, timeout=120.0)) == 3
+    finally:
+        svc.service.draw_keyed = real
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# determinism: batching-invariant draws
+# ---------------------------------------------------------------------------
+
+@threaded
+def test_fixed_seed_and_tenant_order_reproduce_samples_bit_for_bit():
+    # Same seed, same per-tenant submission order — but WILDLY different
+    # coalescing: service A queues everything behind one deadline flush,
+    # service B fires per-row batches, and the global interleaving across
+    # tenants differs. Every sample must still match bit-for-bit.
+    plan = {"a": (3, 1, 2), "b": (2, 2)}
+
+    def run(config, order):
+        svc = AsyncSamplingService(_model(), config,
+                                   tenants={"a": 1, "b": 1}, seed=7)
+        try:
+            tickets = collections.defaultdict(list)
+            for tenant in order:
+                seq = len(tickets[tenant])
+                tickets[tenant].append(
+                    svc.submit(plan[tenant][seq], tenant=tenant))
+            return {t: [tk.result(timeout=120.0) for tk in tks]
+                    for t, tks in tickets.items()}
+        finally:
+            svc.close()
+
+    coalesced = run(ServingConfig(max_batch=4096, deadline_ms=40.0),
+                    ["a", "b", "a", "b", "a"])
+    fragmented = run(ServingConfig(max_batch=1, deadline_ms=5.0),
+                     ["b", "a", "a", "b", "a"])
+    assert coalesced == fragmented
+
+
+@threaded
+def test_async_draws_are_valid_subsets():
+    svc = AsyncSamplingService(
+        _model(), ServingConfig(max_batch=64, deadline_ms=10.0), seed=0)
+    try:
+        rows = svc.sample(8, timeout=120.0)
+        N = 4 * 5
+        for r in rows:
+            assert len(set(r)) == len(r)
+            assert all(0 <= i < N for i in r)
+    finally:
+        svc.close()
+
+
+def test_model_serving_facade_builds_the_async_tier():
+    svc = _model().serving(ServingConfig(max_batch=64, deadline_ms=10.0),
+                           tenants={"x": 2})
+    try:
+        assert isinstance(svc, AsyncSamplingService)
+        assert len(svc.sample(2, tenant="x", timeout=120.0)) == 2
+        assert svc.per_tenant()["x"]["weight"] == 2
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# observability: span parity with the sync path, gauges, health
+# ---------------------------------------------------------------------------
+
+def _span_tree(spans, trace_id):
+    """{op: parent_op} for one trace — the shape the parity claim pins."""
+    mine = [s for s in spans if s["trace"] == trace_id]
+    by_id = {s["span"]: s for s in mine}
+    return {s["op"]: (by_id[s["parent"]]["op"] if s["parent"] else None)
+            for s in mine}
+
+
+@threaded
+def test_async_span_tree_matches_the_sync_path(tmp_path):
+    run_log = tmp_path / "run.jsonl"
+    jtr = obs.JsonlTracker(str(run_log))
+    prev = obs.configure(jtr)
+    try:
+        sync = _model().service(seed=0)
+        sync_ticket = sync.submit(2)
+        sync.flush()
+
+        aservice = AsyncSamplingService(
+            _model(), ServingConfig(max_batch=4096, deadline_ms=15.0),
+            tenants={"a": 1}, seed=0)
+        async_ticket = aservice.submit(2, tenant="a")
+        async_ticket.result(timeout=120.0)
+        aservice.close()        # joins the flush thread: spans all emitted
+    finally:
+        obs.configure(prev)
+        jtr.close()             # -W error: no dangling FileIO at GC time
+
+    from repro.obs.export import is_span_record
+    spans = [r["fields"] for r in obs.read_run_log(str(run_log))
+             if is_span_record(r)]
+    sync_tree = _span_tree(spans, sync_ticket.trace_id)
+    async_tree = _span_tree(spans, async_ticket.trace_id)
+    want = {"service.request": None, "queue-wait": "service.request",
+            "coalesce": "service.request", "device-call": "service.request",
+            "scatter": "service.request"}
+    assert sync_tree == want
+    assert async_tree == want           # parity: same ops, same parents
+    # async spans are tenant-tagged
+    tenant_ops = {s["op"] for s in spans
+                  if s["trace"] == async_ticket.trace_id
+                  and s.get("tenant") == "a"}
+    assert {"service.request", "queue-wait", "device-call"} <= tenant_ops
+
+    # and the run log exports to a well-formed Chrome trace
+    out = tmp_path / "trace.json"
+    exported = obs.ChromeTraceExporter().export(str(run_log), str(out))
+    assert out.exists()
+    names = {ev["name"] for ev in exported["traceEvents"]
+             if ev.get("ph") == "X"}
+    assert {"service.request", "device-call"} <= names
+
+
+@threaded
+def test_serving_metrics_and_health_flow_per_flush():
+    svc = AsyncSamplingService(
+        _model(), ServingConfig(max_batch=4096, deadline_ms=15.0),
+        tenants={"a": 2, "b": 1})
+    try:
+        svc.submit(3, tenant="a").result(timeout=120.0)
+        svc.submit(1, tenant="b").result(timeout=120.0)
+        m = svc._metrics
+        assert svc.stats.flushes >= 1
+        assert svc.stats.admitted == 2
+        assert m.counter_value("serving.requested_rows") == 4
+        assert 0.0 < m.gauges["serving.batch_occupancy"] <= 1.0
+        assert m.percentile("serving.latency_s", 50) > 0.0
+        assert svc.stats.p99_latency_s >= svc.stats.p50_latency_s
+        assert svc.service.stats.health == "healthy"
+        snap = svc.stats()
+        assert set(snap) == set(svc.stats.KEYS)
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# KV-compaction coalescing
+# ---------------------------------------------------------------------------
+
+@threaded
+def test_kv_client_coalesces_streams_into_one_device_call(rng):
+    H, S, d, budget, recency = 4, 16, 4, 6, 2
+    client = KVCompactionClient(
+        budget, recency,
+        ServingConfig(max_batch=4096, deadline_ms=30.0),
+        tenants={"s0": 1, "s1": 1}, seed=0)
+    try:
+        k0 = rng.normal(size=(H, S, d)).astype(np.float32)
+        k1 = rng.normal(size=(H, S, d)).astype(np.float32)
+        t0 = client.submit(k0, valid_len=S, tenant="s0")
+        t1 = client.submit(k1, valid_len=12, tenant="s1")
+        p0 = np.asarray(t0.result(timeout=120.0))
+        p1 = np.asarray(t1.result(timeout=120.0))
+        # both streams' heads rode one vmapped selection call
+        assert client._metrics.counter_value("serving.device_calls") == 1
+        assert client._metrics.counter_value("serving.heads_selected") == 2 * H
+        for picks, valid in ((p0, S), (p1, 12)):
+            assert picks.shape == (H, budget)
+            for row in picks:
+                assert len(set(row.tolist())) == budget
+                assert (np.sort(row) == row).all()
+                assert (row >= 0).all() and (row < valid).all()
+                # the recency tail of the valid window is always kept
+                assert set(range(valid - recency, valid)) <= set(row.tolist())
+    finally:
+        client.close()
+
+
+@threaded
+def test_kv_client_picks_are_batching_invariant(rng):
+    H, S, d = 2, 16, 4
+    k0 = rng.normal(size=(H, S, d)).astype(np.float32)
+    k1 = rng.normal(size=(H, S, d)).astype(np.float32)
+
+    def run(deadline_ms, submits):
+        client = KVCompactionClient(
+            6, 2, ServingConfig(max_batch=4096, deadline_ms=deadline_ms),
+            seed=3)
+        try:
+            tickets = [client.submit(k, tenant=t) for t, k in submits]
+            return [np.asarray(t.result(timeout=120.0)) for t in tickets]
+        finally:
+            client.close()
+
+    together = run(30.0, [("a", k0), ("b", k1)])
+    apart = []
+    for sub in (("a", k0), ("b", k1)):       # one flush per submit
+        apart.extend(run(30.0, [sub]))
+    np.testing.assert_array_equal(together[0], apart[0])
+    np.testing.assert_array_equal(together[1], apart[1])
+
+
+# ---------------------------------------------------------------------------
+# satellite: thread-safe synchronous SamplingService
+# ---------------------------------------------------------------------------
+
+@threaded
+def test_sync_service_survives_concurrent_submit_and_result():
+    svc = _model().service(seed=0)
+    n_threads, per_thread = 6, 4
+    errors = []
+    barrier = threading.Barrier(n_threads)
+
+    def worker(i):
+        try:
+            barrier.wait()
+            for j in range(per_thread):
+                rows = svc.submit(1 + (i + j) % 3).result()
+                assert all(isinstance(r, list) for r in rows)
+        except Exception as e:    # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    requested = sum(1 + (i + j) % 3 for i in range(n_threads)
+                    for j in range(per_thread))
+    assert svc.stats.samples_requested == requested
+    assert svc.stats.samples_drawn >= requested
+    assert svc._pending == []
+
+
+@threaded
+def test_sync_service_keyed_draws_are_order_invariant_across_threads():
+    base = jax.random.PRNGKey(42)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(12))
+    reference = _model().service(seed=0).draw_keyed(keys)[0]
+
+    svc = _model().service(seed=0)
+    out = {}
+    barrier = threading.Barrier(3)
+
+    def worker(idx):
+        barrier.wait()
+        sl = keys[idx * 4: (idx + 1) * 4]
+        out[idx] = svc.draw_keyed(sl)[0]
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    interleaved = [row for i in range(3) for row in out[i]]
+    # keyed rows are a pure function of their key: thread scheduling and
+    # chunking cannot change a single draw
+    assert interleaved == reference
+
+
+# ---------------------------------------------------------------------------
+# satellite: thread-safe SpectralCache
+# ---------------------------------------------------------------------------
+
+@threaded
+def test_spectral_cache_two_thread_hammer_keeps_counters_consistent():
+    from repro.core.krondpp import KronDPP
+    cache = SpectralCache(maxsize=8)
+    kernels = []
+    for s in range(4):
+        model = dpp.random_kron(jax.random.PRNGKey(s), (3, 4))
+        kernels.append(KronDPP(model._factors))
+    rounds = 25
+    errors = []
+    barrier = threading.Barrier(2)
+
+    def hammer(offset):
+        try:
+            barrier.wait()
+            for i in range(rounds):
+                spec = cache.spectrum(kernels[(i + offset) % len(kernels)])
+                assert spec.N == 12
+                _ = cache.stats()
+                _ = len(cache)
+        except Exception as e:    # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(o,)) for o in (0, 2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    s = cache.stats()
+    # 2 factors per spectrum() lookup, nothing lost or double-counted
+    assert s["hits"] + s["misses"] == 2 * 2 * rounds
+    # a miss decomposes under the lock, so each factor is factored ONCE —
+    # no duplicate eigh work even when both threads miss simultaneously
+    assert s["misses"] == 2 * len(kernels)
+    assert s["size"] == 2 * len(kernels)
+    assert len(cache) <= 8
+
+
+# ---------------------------------------------------------------------------
+# satellite: SampleTicket "unresolved after flush" regression
+# ---------------------------------------------------------------------------
+
+def test_failed_device_call_leaves_tickets_retryable(monkeypatch):
+    svc = _model().service(seed=0)
+    ticket = svc.submit(2)
+
+    import repro.sampling.service as service_mod
+    real = service_mod.sample_krondpp_batched
+
+    def boom(*a, **k):
+        raise RuntimeError("device OOM (injected)")
+
+    monkeypatch.setattr(service_mod, "sample_krondpp_batched", boom)
+    with pytest.raises(RuntimeError, match="device OOM"):
+        ticket.result()                 # result() drives the failing flush
+    # the flush died mid-device-call: the ticket MUST still be pending
+    # (not silently dropped) so a retry can resolve it
+    assert ticket in svc._pending
+    assert not ticket.done()
+
+    monkeypatch.setattr(service_mod, "sample_krondpp_batched", real)
+    rows = ticket.result()              # retry flushes and resolves
+    assert len(rows) == 2 and ticket.done()
+
+
+def test_unresolved_after_flush_error_message_path():
+    # a ticket the service does not know about (regression guard for the
+    # pre-lock era where a failed flush could drop tickets): flush()
+    # completes without resolving it and result() must say so, not
+    # return None
+    svc = _model().service(seed=0)
+    orphan = SampleTicket(svc, 2)
+    with pytest.raises(RuntimeError, match="unresolved after flush"):
+        orphan.result()
+
+
+# ---------------------------------------------------------------------------
+# batcher plumbing details
+# ---------------------------------------------------------------------------
+
+def test_async_ticket_result_timeout_names_the_tenant():
+    class Inert(ContinuousBatcher):
+        def _flush(self, batch, trigger):       # pragma: no cover
+            raise AssertionError("must not flush")
+
+    b = Inert(ServingConfig(max_batch=4096, deadline_ms=60_000.0))
+    try:
+        t = b._enqueue(AsyncTicket("slowpoke", 1))
+        with pytest.raises(TimeoutError, match="slowpoke"):
+            t.result(timeout=0.05)
+    finally:
+        b.close(drain=False)
+
+
+@threaded
+def test_context_manager_drains_on_clean_exit():
+    with AsyncSamplingService(
+            _model(), ServingConfig(max_batch=4096,
+                                    deadline_ms=60_000.0)) as svc:
+        t = svc.submit(2)
+    assert len(t.result(timeout=1.0)) == 2
