@@ -23,6 +23,8 @@ import numpy as np
 
 from repro.core import KronDPP, random_krondpp
 from repro.core.krk_picard import krk_picard_step
+# raw-engine benchmark: measures the engine the facade delegates to
+# repro: ignore[facade-boundary]
 from repro.learning import LearningEngine, select_minibatch
 from .common import gaussian_kernel_data, json_report, write_report
 

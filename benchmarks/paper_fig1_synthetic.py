@@ -14,6 +14,8 @@ import jax
 import numpy as np
 
 from repro.core import fit_picard, random_krondpp
+# raw-engine benchmark: measures the engine the facade delegates to
+# repro: ignore[facade-boundary]
 from repro.learning import fit
 from .common import paper_synthetic_data
 

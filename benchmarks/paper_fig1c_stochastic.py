@@ -11,6 +11,8 @@ import jax
 import numpy as np
 
 from repro.core import random_krondpp
+# raw-engine benchmark: measures the engine the facade delegates to
+# repro: ignore[facade-boundary]
 from repro.learning import fit
 from .common import gaussian_kernel_data
 

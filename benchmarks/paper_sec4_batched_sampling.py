@@ -16,7 +16,10 @@ import jax
 import numpy as np
 
 from repro.core import random_krondpp, sample_krondpp
+# raw-engine benchmark: measures the sampling engine directly
+# repro: ignore[facade-boundary]
 from repro.sampling import SpectralCache
+# repro: ignore[facade-boundary]
 from repro.sampling.batched import sample_krondpp_batched
 from .common import json_report, rescale_expected_size
 

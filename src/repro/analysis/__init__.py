@@ -1,0 +1,27 @@
+"""repro.analysis — project-invariant static analysis.
+
+An AST-based lint engine for the correctness rules this repo has learned
+PR by PR and previously enforced with ad-hoc scans scattered through the
+test suite: facade boundaries (PR 3), runtime placement (PR 5), the
+shard_map sort miscompile (PR 5), PRNG key discipline (PR 2/8), trace
+purity for the obs layer (PR 6/7), lock discipline in the threaded tiers
+(PR 8), deprecation hygiene, and Pallas kernel constraints (PR 4).
+
+Run it::
+
+    python -m repro.analysis            # scan src + tests
+    python -m repro.analysis --list-rules
+
+Exit 0 clean / 1 findings / 2 internal error. Suppress a documented
+exception inline with ``# repro: ignore[rule-id]``; grandfather legacy
+findings in ``analysis-baseline.json``. See ``analysis/README.md`` for
+the rule-authoring guide.
+"""
+
+from .engine import Finding, InternalError, analyze_paths
+from .registry import Rule, all_rules, get_rules, register
+
+__all__ = [
+    "Finding", "InternalError", "analyze_paths",
+    "Rule", "all_rules", "get_rules", "register",
+]

@@ -1,0 +1,132 @@
+"""``python -m repro.analysis [paths...]`` — the lint gate.
+
+Exit codes (the CI contract):
+    0  clean (no findings beyond the baseline, no stale baseline entries)
+    1  findings (or stale baseline entries that must be expired)
+    2  internal error (a rule raised, a file failed to parse, a corrupt
+       baseline) — a broken scan must not green-light the tree
+
+Flags:
+    --select id[,id...]   run a subset of rules
+    --baseline PATH       findings file to grandfather (default:
+                          analysis-baseline.json next to the repo root;
+                          missing file = empty baseline)
+    --update-baseline     rewrite the baseline to the current findings
+                          and exit 0 (the escape hatch for landing a new
+                          rule without a flag-day cleanup)
+    --list-rules          print the registry (id, summary, rationale)
+    --json PATH           additionally write a machine-readable report
+                          (CI uploads it as the findings artifact)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from . import suppress
+from .engine import analyze_paths
+from .registry import all_rules
+
+
+def _repo_root(start: Path) -> Path:
+    """Nearest ancestor containing a ``.git`` or ``src/repro`` — where the
+    default scan paths and baseline live. Falls back to cwd."""
+    cur = start.resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / ".git").exists() or (cand / "src" / "repro").is_dir():
+            return cand
+    return start
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro project-invariant static analysis")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to scan (default: src tests)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file (default: <root>/analysis-baseline"
+                         ".json)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="PATH",
+                    help="also write a JSON report")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id}\n    {rule.summary}\n    why: {rule.rationale}")
+        return 0
+
+    root = _repo_root(Path.cwd())
+    paths = args.paths or [p for p in ("src", "tests")
+                           if (root / p).is_dir()]
+    if not args.paths:
+        paths = [str(root / p) for p in paths]
+    select = args.select.split(",") if args.select else None
+
+    try:
+        findings, errors, n_files = analyze_paths(paths, select=select,
+                                                  root=root)
+    except (FileNotFoundError, KeyError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    baseline_path = Path(args.baseline) if args.baseline \
+        else root / "analysis-baseline.json"
+    if args.update_baseline:
+        suppress.write_baseline(baseline_path, findings)
+        print(f"wrote {len(findings)} entr"
+              f"{'y' if len(findings) == 1 else 'ies'} to {baseline_path}")
+        return 0
+    try:
+        entries = suppress.load_baseline(baseline_path)
+    except (ValueError, KeyError, json.JSONDecodeError) as e:
+        print(f"error: corrupt baseline: {e}", file=sys.stderr)
+        return 2
+    new, stale = suppress.apply_baseline(findings, entries)
+
+    for f in new:
+        print(f.render())
+    for e in stale:
+        print(f"stale baseline entry (finding fixed — expire it with "
+              f"--update-baseline): [{e['rule']}] {e['path']}: "
+              f"{e['message']}")
+    for err in errors:
+        print(err.render(), file=sys.stderr)
+
+    n_rules = len(all_rules()) if select is None else len(select)
+    grandfathered = len(findings) - len(new)
+    summary = (f"{n_files} files, {n_rules} rules: {len(new)} finding(s)"
+               + (f", {grandfathered} grandfathered" if grandfathered else "")
+               + (f", {len(stale)} stale baseline entr"
+                  f"{'y' if len(stale) == 1 else 'ies'}" if stale else "")
+               + (f", {len(errors)} internal error(s)" if errors else ""))
+    print(summary)
+
+    if args.json_out:
+        report = {
+            "files": n_files,
+            "findings": [vars(f) for f in new],
+            "grandfathered": grandfathered,
+            "stale_baseline": stale,
+            "internal_errors": [vars(e) for e in errors],
+        }
+        Path(args.json_out).write_text(json.dumps(report, indent=2) + "\n")
+
+    if errors:
+        return 2
+    if new or stale:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via __main__
+    sys.exit(main())

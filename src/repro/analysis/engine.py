@@ -1,0 +1,156 @@
+"""The ``repro.analysis`` scan driver.
+
+``analyze_paths`` walks the requested trees, parses every ``.py`` file
+once, runs each registered rule over it, filters inline suppressions,
+and returns the findings plus any internal errors. The engine knows
+nothing about individual invariants — rules self-scope off the
+:class:`FileContext` — and rules know nothing about file iteration,
+suppression comments, or the baseline.
+
+A rule that *raises* is an engine-internal error (CLI exit 2), never a
+silent skip: a broken rule must not green-light the tree it failed to
+scan. Unparseable files are reported the same way — every file in this
+repo must parse.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import traceback
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from . import suppress, visitors
+from .registry import Rule, get_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one site."""
+
+    rule: str
+    path: str       # posix path as scanned (stable across runs = baselineable)
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class InternalError:
+    """A rule or the parser blew up — exit-2 material."""
+
+    rule: str
+    path: str
+    detail: str
+
+    def render(self) -> str:
+        return f"{self.path}: [internal:{self.rule}] {self.detail}"
+
+
+class FileContext:
+    """Everything a rule gets to look at for one file.
+
+    tree       the parsed module, with ``._repro_parent`` links stamped.
+    lines      raw source lines (1-indexed via ``lines[line - 1]``).
+    parts      path components — rules scope with ``visitors.under`` so
+               fixture trees in tmp dirs scope exactly like the repo.
+    is_test    under ``tests/`` or named ``test_*.py``/``conftest.py``.
+    """
+
+    def __init__(self, path: Path, rel: str, source: str, tree: ast.Module):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.parts = tuple(Path(rel).parts)
+        self.is_test = visitors.is_test_path(self.parts)
+        self.name = self.parts[-1] if self.parts else ""
+
+    # caches shared across rules (built on first use)
+    _funcs = None
+    _assigns = None
+
+    @property
+    def functions(self):
+        if self._funcs is None:
+            self._funcs = visitors.functions_by_name(self.tree)
+        return self._funcs
+
+    @property
+    def assignments(self):
+        if self._assigns is None:
+            self._assigns = visitors.name_assignments(self.tree)
+        return self._assigns
+
+
+def iter_python_files(paths: Sequence[Path]) -> Iterable[Path]:
+    """Every ``.py`` file under ``paths`` (files accepted verbatim),
+    sorted, skipping ``__pycache__`` and hidden directories."""
+    seen = set()
+    for p in paths:
+        p = Path(p)
+        if p.is_file() and p.suffix == ".py":
+            files = [p]
+        elif p.is_dir():
+            files = sorted(
+                f for f in p.rglob("*.py")
+                if "__pycache__" not in f.parts
+                and not any(part.startswith(".") for part in f.parts))
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p}")
+        for f in files:
+            if f not in seen:
+                seen.add(f)
+                yield f
+
+
+def _rel(path: Path, root: Optional[Path]) -> str:
+    if root is not None:
+        try:
+            return path.resolve().relative_to(Path(root).resolve()).as_posix()
+        except ValueError:
+            pass
+    return path.as_posix()
+
+
+def analyze_paths(paths: Sequence, select: Optional[Sequence[str]] = None,
+                  root: Optional[Path] = None
+                  ) -> Tuple[List[Finding], List[InternalError], int]:
+    """Run ``select`` rules (default: all) over every file under ``paths``.
+
+    Returns ``(findings, internal_errors, files_scanned)``. Findings are
+    already suppression-filtered and sorted by (path, line, rule); the
+    baseline is the CLI's business, not the engine's.
+    """
+    rules: List[Rule] = get_rules(select)
+    findings: List[Finding] = []
+    errors: List[InternalError] = []
+    n_files = 0
+    for path in iter_python_files([Path(p) for p in paths]):
+        rel = _rel(path, root)
+        try:
+            source = path.read_text()
+            tree = ast.parse(source, filename=str(path))
+        except (SyntaxError, UnicodeDecodeError, OSError) as e:
+            errors.append(InternalError("parse", rel, repr(e)))
+            continue
+        visitors.add_parents(tree)
+        ctx = FileContext(path, rel, source, tree)
+        n_files += 1
+        for rule in rules:
+            try:
+                hits = list(rule.check(ctx))
+            except Exception:
+                errors.append(InternalError(
+                    rule.id, rel, traceback.format_exc(limit=3)))
+                continue
+            for line, message in hits:
+                if rule.id in suppress.suppressed_rules(ctx.lines, line):
+                    continue
+                findings.append(Finding(rule.id, rel, int(line), message))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, errors, n_files

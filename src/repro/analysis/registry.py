@@ -1,0 +1,82 @@
+"""Rule registry for the ``repro.analysis`` lint engine.
+
+A rule is a plain function ``check(ctx) -> Iterable[(line, message)]``
+registered under a stable kebab-case id. The id is the suppression /
+baseline handle (``# repro: ignore[<id>]``), so once shipped it never
+changes — rename the function, not the id.
+
+Rules self-scope: ``check`` receives every scanned file and returns
+nothing for files outside its jurisdiction (the scoping helpers live in
+``visitors`` — ``in_library``, ``is_test``, ``under``). The engine owns
+file iteration, suppression comments, and the baseline; rules own only
+the invariant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, Iterable, List, Tuple
+
+#: ``check(ctx)`` yields ``(line, message)`` pairs; the engine wraps them
+#: into :class:`repro.analysis.engine.Finding` records.
+CheckFn = Callable[["FileContext"], Iterable[Tuple[int, str]]]
+
+_ID_RE = re.compile(r"^[a-z][a-z0-9]*(-[a-z0-9]+)*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One registered invariant.
+
+    id:          stable kebab-case handle (suppressions, baseline, CLI).
+    summary:     one-line statement of the invariant.
+    rationale:   where the invariant comes from (the PR / incident that
+                 motivated it) — surfaced by ``--list-rules`` and the
+                 rule-authoring guide.
+    check:       the AST scan itself.
+    """
+
+    id: str
+    summary: str
+    rationale: str
+    check: CheckFn
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule_id: str, summary: str, rationale: str
+             ) -> Callable[[CheckFn], CheckFn]:
+    """Decorator: ``@register("my-rule", "...", "...")`` over a check fn."""
+    if not _ID_RE.match(rule_id):
+        raise ValueError(f"rule id {rule_id!r} must be kebab-case")
+
+    def wrap(fn: CheckFn) -> CheckFn:
+        if rule_id in _REGISTRY:
+            raise ValueError(f"duplicate rule id {rule_id!r}")
+        _REGISTRY[rule_id] = Rule(rule_id, summary, rationale, fn)
+        return fn
+
+    return wrap
+
+
+def all_rules() -> List[Rule]:
+    """Every registered rule, id-sorted (imports the rule modules on
+    first use so the registry is populated)."""
+    from . import rules as _rules  # noqa: F401  (import populates registry)
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def get_rules(select=None) -> List[Rule]:
+    """Rules filtered to ``select`` (iterable of ids); unknown ids raise
+    so a typo'd ``--select`` fails loudly instead of passing vacuously."""
+    rules = all_rules()
+    if select is None:
+        return rules
+    want = list(select)
+    known = {r.id for r in rules}
+    unknown = [s for s in want if s not in known]
+    if unknown:
+        raise KeyError(f"unknown rule id(s) {unknown}; known: {sorted(known)}")
+    return [r for r in rules if r.id in want]

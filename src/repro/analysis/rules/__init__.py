@@ -1,0 +1,8 @@
+"""Rule modules — importing this package populates the registry.
+
+One module per invariant family; see ``src/repro/analysis/README.md`` for
+the rule-authoring guide (id, invariant, motivating PR/incident for each).
+"""
+
+from . import (deprecation, facade, locks, pallas, placement, prng,  # noqa: F401
+               purity, shardmap)

@@ -1,0 +1,62 @@
+"""facade-boundary: consumer layers route through ``repro.dpp`` only.
+
+The PR 3 facade made ``repro.dpp`` the single probabilistic API; every
+consumer layer was rerouted and the old free functions became shims. The
+invariant (originally an ad-hoc AST scan in tests/test_dpp_facade.py):
+nothing under ``src/repro/{data,serve,serving,launch}``, ``examples/`` or
+``benchmarks/`` imports ``repro.sampling`` / ``repro.learning`` —
+subsystem internals are reachable only through the facade.
+
+Documented exceptions carry inline suppressions: the async serving tier
+drives the sync ``sampling.service`` engine directly (PR 8's design), and
+raw-engine benchmarks measure the engine against the facade on purpose.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..registry import register
+from ..visitors import under
+
+#: path scopes that make a file a "consumer" of the facade
+_CONSUMER_SCOPES = (
+    ("repro", "data"), ("repro", "serve"), ("repro", "serving"),
+    ("repro", "launch"), ("examples",), ("benchmarks",),
+)
+
+_BANNED = ("sampling", "learning")
+
+
+def _imported_modules(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                yield node.lineno, a.name
+        elif isinstance(node, ast.ImportFrom):
+            yield node.lineno, ("." * node.level) + (node.module or "")
+
+
+def _is_banned(mod: str) -> bool:
+    flat = mod.lstrip(".")
+    if flat.startswith("repro."):
+        flat = flat[len("repro."):]
+    return (flat.split(".")[0] in _BANNED) if flat else False
+
+
+@register(
+    "facade-boundary",
+    "consumer layers (data/serve/serving/launch/examples/benchmarks) must "
+    "not import repro.sampling or repro.learning internals",
+    "PR 3 facade redesign; scan migrated from tests/test_dpp_facade.py")
+def check(ctx):
+    if ctx.is_test:
+        return
+    if not any(under(ctx.parts, *scope) for scope in _CONSUMER_SCOPES):
+        return
+    for line, mod in _imported_modules(ctx.tree):
+        if _is_banned(mod):
+            yield line, (
+                f"imports {mod!r}; consumer layers route through the "
+                f"repro.dpp facade (model.sample/fit/service), not "
+                f"subsystem internals")

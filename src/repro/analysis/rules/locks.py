@@ -1,0 +1,114 @@
+"""lock-discipline: annotated shared state is touched only under its lock.
+
+The threaded modules (``SamplingService``, ``SpectralCache``,
+``ContinuousBatcher`` — PR 8 made the sync tier thread-safe and hangs a
+background flush thread off the batcher) annotate their guarded
+attributes at the assignment site::
+
+    self._pending: List[SampleTicket] = []   #: guarded-by: _lock
+
+Within the defining class, every other read/write of ``self._pending``
+must sit lexically inside ``with self._lock:`` (any ``with`` whose
+context expression is ``self._lock``, including multi-item withs).
+Exemptions, matching the repo's conventions:
+
+* ``__init__`` — construction happens-before any concurrent access;
+* methods named ``*_locked`` — the documented "caller holds the lock"
+  convention (``_flush_locked``, ``_oldest_locked``).
+
+The guard name comes from the annotation, so condition variables work
+too (``#: guarded-by: _cond``). The check is lexical: passing ``self``
+to a helper that touches the attribute elsewhere is not seen — annotate
+state where it lives and keep its access local, which is exactly the
+style the threaded modules already use.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict
+
+from ..registry import register
+from ..visitors import ancestors, enclosing_class, qualname
+
+_GUARD_RE = re.compile(r"#:\s*guarded-by:\s*([A-Za-z_]\w*)")
+_SELF_ATTR_RE = re.compile(r"self\.([A-Za-z_]\w*)")
+
+
+def _guarded_attrs(ctx) -> Dict[ast.ClassDef, Dict[str, str]]:
+    """{class node: {attr: guard}} from ``#: guarded-by:`` comments.
+
+    The annotation binds to the ``self.<attr>`` assigned on its own line,
+    or — when the comment stands alone — on the next line.
+    """
+    per_line: Dict[int, str] = {}
+    for i, text in enumerate(ctx.lines, start=1):
+        m = _GUARD_RE.search(text)
+        if m is None:
+            continue
+        code = text[:m.start()]
+        attr_m = _SELF_ATTR_RE.search(code)
+        if attr_m:
+            per_line[i] = m.group(1)
+        elif i + 1 <= len(ctx.lines):
+            nxt = _SELF_ATTR_RE.search(ctx.lines[i])  # lines[i] is line i+1
+            if nxt:
+                per_line[i + 1] = m.group(1)
+    if not per_line:
+        return {}
+    out: Dict[ast.ClassDef, Dict[str, str]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute) and node.lineno in per_line \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "self" \
+                and isinstance(node.ctx, ast.Store):
+            cls = enclosing_class(node)
+            if cls is not None:
+                out.setdefault(cls, {})[node.attr] = per_line[node.lineno]
+    return out
+
+
+def _under_guard(node: ast.AST, guard: str, method: ast.AST) -> bool:
+    for a in ancestors(node):
+        if a is method:
+            return False
+        if isinstance(a, ast.With):
+            for item in a.items:
+                if qualname(item.context_expr) == f"self.{guard}":
+                    return True
+    return False
+
+
+@register(
+    "lock-discipline",
+    "attributes annotated '#: guarded-by: <lock>' are read/written only "
+    "inside 'with self.<lock>:' (except __init__ and *_locked methods)",
+    "PR 8 thread-safety: SamplingService/SpectralCache/ContinuousBatcher "
+    "state races between the background flush thread and foreground "
+    "callers without their lock")
+def check(ctx):
+    if ctx.is_test:
+        return
+    by_class = _guarded_attrs(ctx)
+    for cls, guarded in by_class.items():
+        for method in cls.body:
+            if not isinstance(method, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                continue
+            if method.name == "__init__" or method.name.endswith("_locked"):
+                continue
+            for node in ast.walk(method):
+                if isinstance(node, ast.Attribute) \
+                        and isinstance(node.value, ast.Name) \
+                        and node.value.id == "self" \
+                        and node.attr in guarded:
+                    guard = guarded[node.attr]
+                    if not _under_guard(node, guard, method):
+                        yield node.lineno, (
+                            f"self.{node.attr} is guarded by self.{guard} "
+                            f"(annotated at its assignment) but "
+                            f"{cls.name}.{method.name} touches it outside "
+                            f"'with self.{guard}:' — take the lock, or "
+                            f"rename the method *_locked if the caller "
+                            f"holds it")

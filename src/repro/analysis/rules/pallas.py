@@ -1,0 +1,155 @@
+"""pallas-kernel: kernel functions stay within what Mosaic can lower.
+
+Two constraints, both learned the expensive way (silent miscompiles or
+opaque lowering errors rather than clean failures):
+
+1. **No closure over enclosing-function locals.** A kernel ``def``'d
+   inside the wrapper that calls ``pl.pallas_call`` can accidentally
+   capture a traced array (a tracer) from the wrapper's scope — the
+   kernel then bakes in one trace-time value, or Mosaic rejects it with
+   an error pointing nowhere near the capture. Statics reach kernels as
+   keyword-only parameters bound via ``functools.partial(_kernel,
+   k_max=..., bn1=...)`` (see ``kernels.phase2_select``); arrays reach
+   them as Refs through ``pallas_call``'s operand list. Module-level
+   names (``jnp``, ``pl``, constants) are of course fine.
+
+2. **No Python ``if``/``for``/``while`` on Ref values.** Positional
+   kernel parameters are Refs; branching on ``ref[...]`` at trace time
+   uses a tracer as a bool. Use ``pl.when`` / ``jnp.where`` /
+   ``lax`` control flow (``phase2_select`` is the worked example —
+   masked ``pl.when`` regions over a static grid). Python loops over
+   *static* keyword-only params (``for t in range(n_tiles)``) are the
+   supported unrolling idiom and are not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional, Set
+
+from ..registry import register
+from ..visitors import (ancestors, in_library, qualname, resolve_func_arg,
+                        walk_scope)
+
+
+def _param_names(fn: ast.AST, *, positional_only: bool) -> Set[str]:
+    if isinstance(fn, ast.Lambda):
+        a = fn.args
+    elif isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        a = fn.args
+    else:
+        return set()
+    out = {p.arg for p in a.posonlyargs} | {p.arg for p in a.args}
+    if not positional_only:
+        out |= {p.arg for p in a.kwonlyargs}
+        if a.vararg:
+            out.add(a.vararg.arg)
+        if a.kwarg:
+            out.add(a.kwarg.arg)
+    return out
+
+
+def _bound_names(fn: ast.AST) -> Set[str]:
+    """Every name the kernel scope binds itself: params, assignment
+    targets, for/with targets, comprehension targets, inner defs,
+    imports."""
+    out = _param_names(fn, positional_only=False)
+    for node in walk_scope(fn):
+        if isinstance(node, ast.Name) and isinstance(
+                node.ctx, (ast.Store, ast.Del)):
+            out.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)) and node is not fn:
+            out.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                out.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+            out |= _param_names(node, positional_only=False)
+    return out
+
+
+def _enclosing_function(fn: ast.AST) -> Optional[ast.AST]:
+    for a in ancestors(fn):
+        if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return a
+    return None
+
+
+def _mentions(expr: ast.AST, names: Set[str]) -> Optional[str]:
+    """A name from ``names`` read inside ``expr`` (directly or under a
+    Subscript/Attribute, i.e. ``ref``, ``ref[...]``, ``ref.shape``)."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                and node.id in names:
+            return node.id
+    return None
+
+
+@register(
+    "pallas-kernel",
+    "pallas_call kernels must not close over enclosing-function locals "
+    "(tracer capture) nor branch/loop in Python on Ref values",
+    "kernels.* convention: statics bind via functools.partial keyword-only "
+    "params, data flows through Refs, control flow is pl.when/lax (see "
+    "phase2_select)")
+def check(ctx):
+    if not in_library(ctx.parts):
+        return
+    seen = set()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = qualname(node.func) or ""
+        if q.split(".")[-1] != "pallas_call" or not node.args:
+            continue
+        kernel = resolve_func_arg(node.args[0], ctx.functions,
+                                  ctx.assignments)
+        if kernel is None or id(kernel) in seen:
+            continue
+        seen.add(id(kernel))
+
+        # 1. closure over enclosing-function locals
+        encl = _enclosing_function(kernel)
+        if encl is not None:
+            encl_locals = _param_names(encl, positional_only=False)
+            for n in ast.walk(encl):
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+                    encl_locals.add(n.id)
+            bound = _bound_names(kernel)
+            reported: Set[str] = set()
+            for n in walk_scope(kernel):
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                        and n.id in encl_locals and n.id not in bound \
+                        and n.id not in reported:
+                    reported.add(n.id)
+                    yield n.lineno, (
+                        f"pallas kernel closes over enclosing-function "
+                        f"local {n.id!r} — if it is an array it is a "
+                        f"trace-time tracer capture; pass arrays as Refs "
+                        f"through pallas_call and statics as keyword-only "
+                        f"params via functools.partial")
+
+        # 2. Python control flow on Ref values
+        if isinstance(kernel, ast.Lambda):
+            continue
+        refs = _param_names(kernel, positional_only=True)
+        for n in walk_scope(kernel):
+            test = None
+            if isinstance(n, (ast.If, ast.While)):
+                test = n.test
+            elif isinstance(n, ast.For):
+                test = n.iter
+            elif isinstance(n, ast.IfExp):
+                test = n.test
+            if test is None:
+                continue
+            hit = _mentions(test, refs)
+            if hit is not None:
+                kind = type(n).__name__.lower()
+                yield n.lineno, (
+                    f"Python {kind} on Ref parameter {hit!r} inside a "
+                    f"pallas kernel — Refs hold traced values; use "
+                    f"pl.when / jnp.where / lax control flow (Python "
+                    f"loops are only for static keyword-only params)")

@@ -1,0 +1,56 @@
+"""runtime-placement: execution placement flows through ``runtime=``.
+
+PR 5 unified placement behind ``repro.dpp.runtime`` (``Local()`` /
+``Mesh(...)`` / ``Host()``); the pre-runtime spellings survive only as
+DeprecationWarning shims. The invariant (originally an ad-hoc AST scan in
+tests/test_runtime.py): outside the shim definitions, no in-repo code
+passes ``backend="device"|"host"`` — the kernel-engine strings
+``"reference"|"pallas"`` are a different, still-supported axis — and no
+file but the ``launch.learn`` shim mentions the ``--distributed`` flag.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..registry import register
+from ..visitors import under
+
+# built at runtime so this rule's own source never contains the banned
+# string constants it scans for (the linter lints itself)
+_PLACEMENT_STRINGS = ("dev" + "ice", "ho" + "st")
+_DISTRIBUTED_FLAG = "--dist" + "ributed"
+_SHIM_FILE = "learn.py"
+
+
+@register(
+    "runtime-placement",
+    'no backend="device"|"host" call sites and no "--distributed" flag '
+    "outside the launch.learn shim; placement is a repro.dpp.runtime "
+    "Runtime",
+    "PR 5 placement API; scan migrated from tests/test_runtime.py")
+def check(ctx):
+    if ctx.is_test or not (under(ctx.parts, "repro")
+                           or under(ctx.parts, "examples")
+                           or under(ctx.parts, "benchmarks")):
+        return
+    if under(ctx.parts, "repro", "analysis"):
+        return  # the linter itself names these spellings in messages
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg == "backend" and isinstance(kw.value, ast.Constant) \
+                        and kw.value.value in _PLACEMENT_STRINGS:
+                    yield node.lineno, (
+                        f"passes backend={kw.value.value!r}; placement is a "
+                        f"repro.dpp.runtime Runtime (Local()/Mesh()/Host()) "
+                        f"— backend= placement strings are deprecated shims")
+        # exact string constant (an argparse flag / flag lookup) — prose
+        # mentions inside longer docstrings are different Constant values
+        # and never match
+        if isinstance(node, ast.Constant) and node.value == _DISTRIBUTED_FLAG \
+                and ctx.name != _SHIM_FILE:
+            yield node.lineno, (
+                f"uses {_DISTRIBUTED_FLAG!r}; only the launch.learn "
+                f"DeprecationWarning shim may mention the legacy flag — "
+                f"use --runtime mesh")

@@ -1,0 +1,195 @@
+"""PRNG discipline: keys are consumed once, and library code never bakes
+in a literal seed.
+
+prng-key-reuse
+    A PRNG key passed to two consuming ``jax.random.*`` calls without a
+    ``split``/``fold_in``-producing reassignment between them yields
+    correlated (usually identical) draws — the exact bug class the
+    serving tier's batching-invariant keying (``TenantKeyring``) and the
+    engine's per-sweep ``key, k_sel = split(key)`` chain exist to
+    prevent. ``fold_in(key, data)`` does NOT consume its key: deriving
+    many streams from one base via distinct fold data is the sanctioned
+    pattern. ``split`` does: two ``split(key)`` calls return the same
+    subkeys.
+
+    The scan is straight-line per block: branches are analyzed with a
+    copy of the state and never merged back, so an if/else that consumes
+    the same key on both arms is (correctly) not a reuse. Conservative by
+    construction — it catches the sequential footgun, not every aliasing
+    route.
+
+prng-literal-key
+    ``PRNGKey(<literal int>)`` in library (non-test) code hardwires a
+    sampling stream: every process draws the same "random" numbers, and
+    two call sites with the same literal silently correlate. Seeds enter
+    the library through parameters (``seed: int``) or CLI args. Tests,
+    examples and benchmarks pin seeds deliberately and are exempt.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict
+
+from ..registry import register
+from ..visitors import in_library, qualname
+
+#: jax.random.* callables that CONSUME the key state they are passed.
+#: Producers/derivers (PRNGKey, key, fold_in, key_data, clone) are not
+#: listed; split IS a consumer (same key -> same subkeys).
+_CONSUMERS = frozenset({
+    "split", "normal", "uniform", "randint", "bernoulli", "beta", "gamma",
+    "exponential", "gumbel", "laplace", "logistic", "poisson", "rademacher",
+    "truncated_normal", "categorical", "choice", "permutation", "shuffle",
+    "dirichlet", "bits", "orthogonal", "t", "cauchy", "maxwell", "ball",
+    "loggamma", "multivariate_normal", "binomial", "geometric", "rayleigh",
+    "triangular", "wald", "weibull_min",
+})
+
+
+def _consumed_key_name(call: ast.Call):
+    """The Name a consuming jax.random call reads its key from, if any."""
+    q = qualname(call.func)
+    if q is None:
+        return None
+    parts = q.split(".")
+    if parts[-1] not in _CONSUMERS or "random" not in parts[:-1]:
+        return None
+    arg = None
+    if call.args:
+        arg = call.args[0]
+    else:
+        for kw in call.keywords:
+            if kw.arg == "key":
+                arg = kw.value
+    return arg.id if isinstance(arg, ast.Name) else None
+
+
+def _assigned_names(stmt: ast.stmt):
+    tgts = []
+    if isinstance(stmt, ast.Assign):
+        tgts = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        tgts = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        tgts = [stmt.target]
+    elif isinstance(stmt, ast.With):
+        tgts = [i.optional_vars for i in stmt.items if i.optional_vars]
+    out = set()
+    for t in tgts:
+        for node in ast.walk(t):
+            if isinstance(node, ast.Name):
+                out.add(node.id)
+    return out
+
+
+def _calls_outside_nested_defs(stmt: ast.stmt, *, skip_bodies: bool):
+    """Calls within one statement, not descending into nested function
+    definitions (their bodies run later, on their own key arguments) and,
+    for compound statements, not into sub-blocks (scanned separately)."""
+    blocks = []
+    if skip_bodies and isinstance(
+            stmt, (ast.If, ast.For, ast.While, ast.With, ast.Try)):
+        # only the header expressions (test/iter/items) belong to this
+        # statement's straight-line position
+        headers = []
+        if isinstance(stmt, (ast.If, ast.While)):
+            headers = [stmt.test]
+        elif isinstance(stmt, ast.For):
+            headers = [stmt.iter]
+        elif isinstance(stmt, ast.With):
+            headers = [i.context_expr for i in stmt.items]
+        for h in headers:
+            blocks.append(h)
+    else:
+        blocks.append(stmt)
+    stack = list(blocks)
+    while stack:
+        node = stack.pop()
+        if node is not stmt and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue  # nested defs run later, on their own keys
+        if isinstance(node, ast.Call):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _scan_block(stmts, state: Dict[str, int], findings) -> None:
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue  # separate scope, scanned by the module-level walk
+        compound = isinstance(stmt, (ast.If, ast.For, ast.While, ast.Try))
+        for call in _calls_outside_nested_defs(
+                stmt, skip_bodies=compound or isinstance(stmt, ast.With)):
+            name = _consumed_key_name(call)
+            if name is None:
+                continue
+            if name in state:
+                findings.append((call.lineno, (
+                    f"PRNG key {name!r} already consumed on line "
+                    f"{state[name]} is consumed again without an "
+                    f"intervening split/fold_in — correlated draws; "
+                    f"re-derive with key, sub = jax.random.split(key)")))
+            else:
+                state[name] = call.lineno
+        # reassignment re-arms the name (key, sub = split(key))
+        for name in _assigned_names(stmt):
+            state.pop(name, None)
+        # sub-blocks: branches get a copy (never merged back); with-bodies
+        # run unconditionally and share the live state
+        if isinstance(stmt, ast.With):
+            _scan_block(stmt.body, state, findings)
+        elif isinstance(stmt, ast.If):
+            _scan_block(stmt.body, dict(state), findings)
+            _scan_block(stmt.orelse, dict(state), findings)
+        elif isinstance(stmt, (ast.For, ast.While)):
+            _scan_block(stmt.body, dict(state), findings)
+            _scan_block(stmt.orelse, dict(state), findings)
+        elif isinstance(stmt, ast.Try):
+            for blk in (stmt.body, stmt.orelse, stmt.finalbody,
+                        *[h.body for h in stmt.handlers]):
+                _scan_block(blk, dict(state), findings)
+
+
+@register(
+    "prng-key-reuse",
+    "a PRNG key must not feed two consuming jax.random calls without a "
+    "split/fold_in between them",
+    "serving-tier batching-invariant keying (PR 8) and the engine's "
+    "per-sweep split chain (PR 2) both exist to prevent correlated draws")
+def check(ctx):
+    if not in_library(ctx.parts):
+        return
+    findings = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _scan_block(node.body, {}, findings)
+    yield from findings
+
+
+@register(
+    "prng-literal-key",
+    "no literal PRNGKey(<int>) in library (non-test) code — seeds flow in "
+    "through parameters",
+    "a baked-in seed makes every process draw identical 'random' numbers "
+    "and silently correlates call sites")
+def check_literal(ctx):
+    if not in_library(ctx.parts):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        q = qualname(node.func) or ""
+        parts = q.split(".")
+        is_prngkey = parts[-1] == "PRNGKey"
+        is_new_key = q in ("jax.random.key",)
+        if not (is_prngkey or is_new_key):
+            continue
+        arg = node.args[0]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, int):
+            yield node.lineno, (
+                f"literal {parts[-1]}({arg.value}) in library code — thread "
+                f"a seed parameter through instead (or suppress where the "
+                f"key value is provably irrelevant, e.g. shape-only "
+                f"eval_shape probes)")

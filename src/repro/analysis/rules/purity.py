@@ -1,0 +1,157 @@
+"""trace-purity: no host effects inside traced bodies.
+
+Functions traced by ``jax.jit`` / ``lax.scan`` / ``lax.while_loop`` /
+``lax.fori_loop`` / ``lax.cond`` / ``pl.pallas_call`` execute their
+Python exactly once, at trace time. A ``print``, a ``time.*`` read, or a
+tracker emission inside one does not run per step — it fires once per
+compiled specialization and then silently never again, which is almost
+never what the author meant (and when it IS meant, as with
+``kernels.ops._count_dispatch``'s per-specialization dispatch counters,
+the call sits at the dispatch decision point outside any traced def).
+
+Tracker emission is recognized by receiver spelling (``tracker.counter``,
+``*_tracker.gauge``, ``obs.current_tracker().event`` ...); an emission
+wrapped in an ``if obs.enabled(tracker):`` guard is also flagged — the
+guard itself evaluates at trace time, so it cannot make the emission
+per-step. Use host callbacks or emit at chunk boundaries like
+``learning.engine.run`` does.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..registry import register
+from ..visitors import (in_library, qualname, resolve_func_arg, walk_scope)
+
+#: tracing entry points -> indices of the traced callable arguments
+_TRACERS = {
+    "jit": (0,),
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "cond": (1, 2),
+    "switch": None,          # every arg past the index is a branch
+    "map": (0,),
+    "pallas_call": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+    "custom_vjp": (0,),
+    "vmap": (0,),
+    "pmap": (0,),
+}
+
+_TIME_FNS = {"time", "perf_counter", "monotonic", "process_time", "sleep",
+             "time_ns", "perf_counter_ns", "monotonic_ns"}
+
+_EMIT_METHODS = {"counter", "gauge", "observe", "event", "timer"}
+
+
+def _traced_callable_args(call: ast.Call):
+    q = qualname(call.func)
+    if q is None:
+        return ()
+    parts = q.split(".")
+    name = parts[-1]
+    if name not in _TRACERS or name == "partial":
+        return ()
+    prefix = ".".join(parts[:-1])
+    if prefix and prefix.split(".")[-1] not in (
+            "jax", "lax", "pl", "pallas"):
+        return ()
+    if name == "map" and not prefix:
+        return ()  # bare map() is the Python builtin, not lax.map
+    idxs = _TRACERS[name]
+    if idxs is None:  # switch(index, branches...) or switch(i, [b1, b2])
+        out = []
+        for a in call.args[1:]:
+            if isinstance(a, (ast.List, ast.Tuple)):
+                out.extend(a.elts)
+            else:
+                out.append(a)
+        return out
+    return [call.args[i] for i in idxs if i < len(call.args)]
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    q = qualname(dec)
+    if q in ("jax.jit", "jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        dq = qualname(dec.func) or ""
+        if dq in ("jax.jit", "jit"):
+            return True
+        if dq.split(".")[-1] == "partial" and dec.args:
+            return qualname(dec.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _tracker_receiver(func: ast.expr) -> bool:
+    """True when ``func`` looks like a tracker emission method access."""
+    if not isinstance(func, ast.Attribute) or func.attr not in _EMIT_METHODS:
+        return False
+    recv = func.value
+    if isinstance(recv, ast.Call):
+        rq = qualname(recv.func) or ""
+        return rq.split(".")[-1] in ("current_tracker", "tee")
+    rq = qualname(recv)
+    return rq is not None and "tracker" in rq.lower()
+
+
+def _host_effects(fn: ast.AST):
+    for node in walk_scope(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        q = qualname(node.func)
+        if q == "print":
+            yield node.lineno, "print() inside a traced body runs once " \
+                "at trace time, not per step — use jax.debug.print or " \
+                "move it to the host driver"
+            continue
+        if q is not None:
+            parts = q.split(".")
+            if len(parts) >= 2 and parts[-2] == "time" \
+                    and parts[-1] in _TIME_FNS:
+                yield node.lineno, (
+                    f"{q}() inside a traced body reads the clock once at "
+                    f"trace time — time on the host around the compiled "
+                    f"call (see learning.engine.run)")
+                continue
+        if _tracker_receiver(node.func):
+            yield node.lineno, (
+                "tracker emission inside a traced body fires once per "
+                "compiled specialization, not per execution — emit at "
+                "chunk/flush boundaries on the host (an enabled() guard "
+                "does not help: it is evaluated at trace time too)")
+
+
+@register(
+    "trace-purity",
+    "no host effects (print, time.*, tracker emission) inside jit/scan/"
+    "while_loop/cond/pallas_call bodies",
+    "repro.obs design (PR 6): hot loops emit at chunk boundaries; "
+    "trace-time emission is reserved for kernels.ops dispatch counters "
+    "which sit outside any traced def")
+def check(ctx):
+    if not in_library(ctx.parts):
+        return
+    traced = []
+    seen = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(d) for d in node.decorator_list):
+                traced.append(node)
+        elif isinstance(node, ast.Call):
+            for arg in _traced_callable_args(node):
+                fn = resolve_func_arg(arg, ctx.functions, ctx.assignments)
+                if fn is not None:
+                    traced.append(fn)
+    for fn in traced:
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        emitted = set()
+        for line, msg in _host_effects(fn):
+            if line not in emitted:
+                emitted.add(line)
+                yield line, msg

@@ -1,0 +1,94 @@
+"""Inline suppressions and the committed findings baseline.
+
+Suppressions
+    ``# repro: ignore[rule-id]`` (comma-separated ids allowed) on the
+    flagged line, or alone on the line directly above it, silences that
+    rule there. Suppressions are for *documented exceptions* — pair them
+    with a justification comment; anything else belongs in a fix.
+
+Baseline
+    ``analysis-baseline.json`` grandfathers pre-existing findings so the
+    CLI can gate CI from day one without a flag-day cleanup. Entries are
+    keyed on ``(rule, path, message)`` — line numbers drift with every
+    edit, messages only change when the violation itself does. A baseline
+    entry whose finding no longer exists is *stale* and reported (the fix
+    landed — expire the entry with ``--update-baseline`` so it cannot mask
+    a future regression at the same site).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+_SUPPRESS_RE = re.compile(r"#\s*repro:\s*ignore\[([a-z0-9,\-\s]+)\]")
+
+BASELINE_VERSION = 1
+
+
+def suppressed_rules(lines: Sequence[str], line: int) -> Set[str]:
+    """Rule ids suppressed at 1-indexed ``line`` — from a trailing comment
+    on the line itself or a comment-only line directly above."""
+    out: Set[str] = set()
+    for idx in (line, line - 1):
+        if 1 <= idx <= len(lines):
+            text = lines[idx - 1]
+            if idx == line - 1 and not text.lstrip().startswith("#"):
+                continue  # the line above only counts when it is a comment
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                out.update(s.strip() for s in m.group(1).split(","))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def _entry_key(entry: Dict[str, str]) -> Tuple[str, str, str]:
+    return (entry["rule"], entry["path"], entry["message"])
+
+
+def load_baseline(path: Path) -> List[Dict[str, str]]:
+    """Entries from a baseline file; [] when the file does not exist.
+    Anything malformed raises — a corrupt baseline must fail the run
+    (exit 2), not silently un-grandfather every finding."""
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    if not isinstance(data, dict) or data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"{path}: expected a repro.analysis baseline with "
+            f"version={BASELINE_VERSION}")
+    entries = data.get("entries", [])
+    for e in entries:
+        _entry_key(e)  # KeyError on malformed entries
+    return entries
+
+
+def write_baseline(path: Path, findings: Iterable) -> None:
+    """Write the current findings as the new baseline (sorted, stable)."""
+    entries = sorted(
+        {(f.rule, f.path, f.message) for f in findings})
+    payload = {
+        "version": BASELINE_VERSION,
+        "entries": [{"rule": r, "path": p, "message": m}
+                    for r, p, m in entries],
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def apply_baseline(findings: List, entries: List[Dict[str, str]]
+                   ) -> Tuple[List, List[Dict[str, str]]]:
+    """Split findings into (new, _) and return stale baseline entries.
+
+    A finding matching a baseline entry is grandfathered (dropped); an
+    entry matching no finding is stale and returned for reporting.
+    """
+    keys = {_entry_key(e) for e in entries}
+    new = [f for f in findings if (f.rule, f.path, f.message) not in keys]
+    found = {(f.rule, f.path, f.message) for f in findings}
+    stale = [e for e in entries if _entry_key(e) not in found]
+    return new, stale

@@ -1,0 +1,160 @@
+"""Shared AST plumbing for ``repro.analysis`` rules.
+
+Everything here is deliberately *lexical*: rules reason about what the
+source says, not what it would do at runtime. The helpers cover the four
+recurring needs — dotted-name resolution (``qualname``), parent links
+(``add_parents`` / ``ancestors``), resolving a function argument back to
+its local ``def`` (``resolve_func_arg``, unwrapping ``functools.partial``),
+and path scoping (``is_test_path`` / ``under``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# names
+# ---------------------------------------------------------------------------
+
+def qualname(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain (``jax.random.choice``), or
+    None for anything fancier (subscripts, calls)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parent links
+# ---------------------------------------------------------------------------
+
+def add_parents(tree: ast.AST) -> None:
+    """Stamp ``._repro_parent`` on every node (idempotent)."""
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._repro_parent = node  # type: ignore[attr-defined]
+
+
+def ancestors(node: ast.AST) -> Iterator[ast.AST]:
+    """Walk parent links up to the module (requires ``add_parents``)."""
+    cur = getattr(node, "_repro_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_repro_parent", None)
+
+
+def enclosing_class(node: ast.AST) -> Optional[ast.ClassDef]:
+    for a in ancestors(node):
+        if isinstance(a, ast.ClassDef):
+            return a
+    return None
+
+
+# ---------------------------------------------------------------------------
+# function-argument resolution
+# ---------------------------------------------------------------------------
+
+def functions_by_name(tree: ast.AST) -> Dict[str, ast.FunctionDef]:
+    """Every ``def`` in the module (any nesting depth), by bare name.
+    On collision the first definition wins — good enough for the lexical
+    resolution the rules need, and collisions are rare in this tree."""
+    out: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    return out
+
+
+def name_assignments(tree: ast.AST) -> Dict[str, ast.expr]:
+    """``name -> value`` for simple single-target assignments anywhere in
+    the module (``kern = functools.partial(_kernel, ...)``). Last one wins."""
+    out: Dict[str, ast.expr] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            out[node.targets[0].id] = node.value
+    return out
+
+
+def resolve_func_arg(node: ast.expr, funcs: Dict[str, ast.FunctionDef],
+                     assigns: Dict[str, ast.expr], _depth: int = 0):
+    """Resolve a callable-valued expression to the function node it names.
+
+    Handles the three spellings the repo uses: a bare ``Name`` (looked up
+    among local ``def``s, or chased through one simple assignment), an
+    inline ``lambda``, and ``functools.partial(f, ...)`` (resolved to
+    ``f``). Returns a FunctionDef / Lambda, or None when the target is
+    dynamic (a parameter, an attribute) — rules skip those.
+    """
+    if _depth > 4 or node is None:
+        return None
+    if isinstance(node, ast.Lambda):
+        return node
+    if isinstance(node, ast.Name):
+        if node.id in funcs:
+            return funcs[node.id]
+        if node.id in assigns:
+            tgt = assigns[node.id]
+            if not isinstance(tgt, ast.Name):  # avoid trivial self-loops
+                return resolve_func_arg(tgt, funcs, assigns, _depth + 1)
+        return None
+    if isinstance(node, ast.Call):
+        q = qualname(node.func) or ""
+        if q.split(".")[-1] == "partial" and node.args:
+            return resolve_func_arg(node.args[0], funcs, assigns, _depth + 1)
+    return None
+
+
+def walk_scope(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body *including* nested defs/lambdas — the traced
+    region of a jit/scan/shard_map body covers its inner helpers too."""
+    yield from ast.walk(fn)
+
+
+# ---------------------------------------------------------------------------
+# path scoping
+# ---------------------------------------------------------------------------
+
+def is_test_path(parts: Sequence[str]) -> bool:
+    """Anything under a ``tests`` directory or named ``test_*.py`` /
+    ``conftest.py`` — rules guarding *library* discipline skip these
+    (tests reuse keys deliberately, exercise deprecated shims, etc.)."""
+    if "tests" in parts:
+        return True
+    name = parts[-1] if parts else ""
+    return name.startswith("test_") or name == "conftest.py"
+
+
+def under(parts: Sequence[str], *segments: str) -> bool:
+    """True when ``segments`` appear consecutively in the path parts —
+    ``under(parts, "repro", "data")`` matches any .../repro/data/... file
+    regardless of where the scanned tree is rooted (real repo or a test
+    fixture tree in tmp)."""
+    n = len(segments)
+    return any(tuple(parts[i:i + n]) == segments
+               for i in range(len(parts) - n + 1))
+
+
+def in_library(parts: Sequence[str]) -> bool:
+    """Library code: under a ``repro`` package dir and not a test file."""
+    return under(parts, "repro") and not is_test_path(parts)
+
+
+# ---------------------------------------------------------------------------
+# guard-comment parsing (lock-discipline rule)
+# ---------------------------------------------------------------------------
+
+GUARD_RE = r"#:\s*guarded-by:\s*([A-Za-z_]\w*)"
+
+
+def iter_calls(tree: ast.AST) -> Iterator[ast.Call]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node

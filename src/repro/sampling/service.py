@@ -208,8 +208,8 @@ class SamplingService:
         self.k_max = int(k_max) if k_max is not None \
             else self.spectrum.suggested_k_max()
         self.max_batch = int(max_batch)
-        self._key = jax.random.PRNGKey(seed)
-        self._pending: List[SampleTicket] = []
+        self._key = jax.random.PRNGKey(seed)      #: guarded-by: _lock
+        self._pending: List[SampleTicket] = []    #: guarded-by: _lock
         # guards _pending, _key, and flush/draw critical sections; RLock so
         # result() -> flush() composes with callers already holding it
         self._lock = threading.RLock()

@@ -128,10 +128,10 @@ class SpectralCache:
 
     def __init__(self, maxsize: int = 16):
         self.maxsize = maxsize
-        self._entries = collections.OrderedDict()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        self._entries = collections.OrderedDict()  #: guarded-by: _lock
+        self.hits = 0                              #: guarded-by: _lock
+        self.misses = 0                            #: guarded-by: _lock
+        self.evictions = 0                         #: guarded-by: _lock
         self._lock = threading.RLock()
 
     def __len__(self) -> int:

@@ -152,12 +152,13 @@ class ContinuousBatcher:
         self._tracker = tracker
         self._metrics = obs.InMemoryTracker()
         self._cond = threading.Condition()
+        #: guarded-by: _cond
         self._tenants: "OrderedDict[str, _TenantState]" = OrderedDict()
         for name, weight in parse_tenants(tenants).items():
             self._tenants[name] = _TenantState(name, weight)
-        self._rows_pending = 0
-        self._closed = False
-        self._thread: Optional[threading.Thread] = None
+        self._rows_pending = 0                     #: guarded-by: _cond
+        self._closed = False                       #: guarded-by: _cond
+        self._thread: Optional[threading.Thread] = None  #: guarded-by: _cond
         self._thread_name = thread_name
         # EWMA of flush wall time (s): the deadline trigger fires this
         # much early so deadline_ms bounds submit->resolve, not

@@ -27,6 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from .. import obs
+# serving is the async front-end over the sampling engine (PR 8 design):
+# it owns flush-span emission, so it imports the engine's span helper
+# repro: ignore[facade-boundary]
 from ..sampling.service import emit_flush_spans
 from ..serve.kv_compaction import dpp_select_tokens
 from .batcher import AsyncTicket, ContinuousBatcher, ServingConfig

@@ -35,6 +35,9 @@ import time
 from typing import List, Optional
 
 from .. import obs
+# serving wraps the sync SamplingService engine directly (PR 8 design);
+# it is a peer tier over the engine, not a facade consumer
+# repro: ignore[facade-boundary]
 from ..sampling.service import SamplingService, emit_flush_spans
 from .batcher import AsyncTicket, ContinuousBatcher, ServingConfig
 from .keys import TenantKeyring

@@ -6,7 +6,6 @@ contract of the pre-facade free functions, and the architectural rule that
 every consumer layer routes through ``repro.dpp``.
 """
 
-import ast
 import itertools
 import pathlib
 import warnings
@@ -348,32 +347,16 @@ def test_facade_paths_do_not_warn():
 # architecture: consumer layers route through repro.dpp only
 # ---------------------------------------------------------------------------
 
-def _imported_modules(path: pathlib.Path):
-    tree = ast.parse(path.read_text())
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Import):
-            for a in node.names:
-                yield a.name
-        elif isinstance(node, ast.ImportFrom):
-            mod = node.module or ""
-            yield ("." * node.level) + mod
-
-
 def test_consumer_layers_do_not_import_subsystem_internals():
-    """Acceptance rule: no file under src/repro/{data,serve,launch} or
-    examples/ imports repro.sampling / repro.learning directly — everything
-    routes through the repro.dpp facade."""
+    """The invariant lives in repro.analysis as the ``facade-boundary``
+    rule (with TP/TN fixtures and a parity test in test_analysis.py);
+    here we pin that the real tree runs clean — including serving/ and
+    benchmarks/, which the rule scans and the old ad-hoc scan did not."""
+    from repro.analysis import analyze_paths
     root = pathlib.Path(__file__).resolve().parent.parent
-    scanned = []
-    for rel in ("src/repro/data", "src/repro/serve", "src/repro/launch",
-                "examples"):
-        for path in sorted((root / rel).glob("*.py")):
-            scanned.append(path)
-            for mod in _imported_modules(path):
-                flat = mod.lstrip(".")
-                assert not flat.startswith(("sampling", "learning")) \
-                    and "repro.sampling" not in mod \
-                    and "repro.learning" not in mod, \
-                    f"{path.relative_to(root)} imports {mod!r}; " \
-                    f"route through repro.dpp instead"
-    assert len(scanned) >= 12        # the rule actually scanned the tree
+    findings, errors, n_files = analyze_paths(
+        [root / "src", root / "examples", root / "benchmarks"],
+        select=["facade-boundary"], root=root)
+    assert not errors, [e.render() for e in errors]
+    assert not findings, [f.render() for f in findings]
+    assert n_files >= 12             # the rule actually scanned the tree

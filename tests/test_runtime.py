@@ -19,7 +19,6 @@ Three layers of coverage:
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (tier-1).
 """
 
-import ast
 import os
 import pathlib
 import subprocess
@@ -144,33 +143,16 @@ def test_runtime_paths_do_not_warn():
 # ---------------------------------------------------------------------------
 
 def test_no_consumer_passes_placement_strings_or_distributed():
-    """Acceptance rule: outside the shim definitions, no in-repo code
-    passes ``backend="device"|"host"`` (the kernel-engine strings
-    "reference"/"pallas" are a different, still-supported axis) and no
-    file but the ``launch.learn`` shim mentions ``--distributed``."""
-    scanned = []
-    for rel in ("src/repro", "examples", "benchmarks"):
-        for path in sorted((ROOT / rel).rglob("*.py")):
-            scanned.append(path)
-            tree = ast.parse(path.read_text())
-            for node in ast.walk(tree):
-                if isinstance(node, ast.Call):
-                    for kw in node.keywords:
-                        if kw.arg == "backend" \
-                                and isinstance(kw.value, ast.Constant):
-                            assert kw.value.value not in ("device", "host"), (
-                                f"{path.relative_to(ROOT)}:{node.lineno} "
-                                f"passes backend={kw.value.value!r}; "
-                                f"placement is a repro.dpp.runtime Runtime")
-                # exact string constant (an argparse flag / flag lookup) —
-                # prose mentions in docstrings are fine
-                if isinstance(node, ast.Constant) \
-                        and node.value == "--distributed" \
-                        and path.name != "learn.py":
-                    raise AssertionError(
-                        f"{path.relative_to(ROOT)}:{node.lineno} uses "
-                        f"--distributed; only the launch.learn shim may")
-    assert len(scanned) > 60       # the rule actually scanned the tree
+    """The invariant lives in repro.analysis as the ``runtime-placement``
+    rule (TP/TN fixtures and a parity test in test_analysis.py); here we
+    pin that the real tree runs clean."""
+    from repro.analysis import analyze_paths
+    findings, errors, n_files = analyze_paths(
+        [ROOT / "src", ROOT / "examples", ROOT / "benchmarks"],
+        select=["runtime-placement"], root=ROOT)
+    assert not errors, [e.render() for e in errors]
+    assert not findings, [f.render() for f in findings]
+    assert n_files > 60            # the rule actually scanned the tree
     # the learn.py occurrences are exactly the shim (argparse def + handler)
     learn = (ROOT / "src/repro/launch/learn.py").read_text()
     assert learn.count('"--distributed"') == 1 and "deprecated" in learn
