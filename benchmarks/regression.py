@@ -66,6 +66,13 @@ GATED = {
         "row_key": "workload",
         "metrics": (("local_per_sec", True), ("mesh_per_sec", True)),
     },
+    # the dual route's two claims: per-row sampling latency (including
+    # the N = 65536 row no dense path can produce) and learner throughput
+    "lowrank_dual": {
+        "row_key": "N",
+        "metrics": (("lowrank_sample_us", False),
+                    ("lowrank_fit_sweeps_per_s", True)),
+    },
     # latency percentiles are too machine-sensitive to ratchet; the gate
     # holds the serving tier's throughput and its coalescing claim
     # (requested rows per device call must stay > 1 by a wide margin)

@@ -26,18 +26,18 @@ from typing import List
 
 
 def _modules():
-    from . import (facade_api, kernel_bench, paper_fig1_engine,
-                   paper_fig1_synthetic, paper_fig1c_stochastic,
-                   paper_sec4_batched_sampling, paper_sec4_phase2_fused,
-                   paper_sec4_sampling, paper_table1_quality,
-                   paper_table2_runtime, roofline, runtime_scaling,
-                   serving_load)
+    from . import (facade_api, kernel_bench, lowrank_dual,
+                   paper_fig1_engine, paper_fig1_synthetic,
+                   paper_fig1c_stochastic, paper_sec4_batched_sampling,
+                   paper_sec4_phase2_fused, paper_sec4_sampling,
+                   paper_table1_quality, paper_table2_runtime, roofline,
+                   runtime_scaling, serving_load)
     return (paper_fig1_synthetic, paper_fig1c_stochastic,
             paper_fig1_engine,
             paper_table1_quality, paper_table2_runtime,
             paper_sec4_sampling, paper_sec4_batched_sampling,
             paper_sec4_phase2_fused,
-            facade_api, runtime_scaling,
+            facade_api, lowrank_dual, runtime_scaling,
             kernel_bench, roofline, serving_load)
 
 

@@ -4,8 +4,10 @@ The PR 3 facade made ``repro.dpp`` the single probabilistic API; every
 consumer layer was rerouted and the old free functions became shims. The
 invariant (originally an ad-hoc AST scan in tests/test_dpp_facade.py):
 nothing under ``src/repro/{data,serve,serving,launch}``, ``examples/`` or
-``benchmarks/`` imports ``repro.sampling`` / ``repro.learning`` —
-subsystem internals are reachable only through the facade.
+``benchmarks/`` imports ``repro.sampling`` / ``repro.learning`` /
+``repro.lowrank`` — subsystem internals are reachable only through the
+facade (``dpp.LowRank`` and the feature-map constructors are re-exported
+there).
 
 Documented exceptions carry inline suppressions: the async serving tier
 drives the sync ``sampling.service`` engine directly (PR 8's design), and
@@ -25,7 +27,7 @@ _CONSUMER_SCOPES = (
     ("repro", "launch"), ("examples",), ("benchmarks",),
 )
 
-_BANNED = ("sampling", "learning")
+_BANNED = ("sampling", "learning", "lowrank")
 
 
 def _imported_modules(tree: ast.Module):
@@ -47,7 +49,7 @@ def _is_banned(mod: str) -> bool:
 @register(
     "facade-boundary",
     "consumer layers (data/serve/serving/launch/examples/benchmarks) must "
-    "not import repro.sampling or repro.learning internals",
+    "not import repro.sampling, repro.learning or repro.lowrank internals",
     "PR 3 facade redesign; scan migrated from tests/test_dpp_facade.py")
 def check(ctx):
     if ctx.is_test:

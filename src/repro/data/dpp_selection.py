@@ -6,6 +6,13 @@ offsets. L1 models inter-shard similarity (e.g. topic centroids), L2
 intra-shard similarity. Exact sampling costs O(N1^3 + N2^3 + N k^3) per batch
 (paper Sec. 4).
 
+``from_features`` also has a **low-rank route** (default above
+``LOWRANK_THRESHOLD`` documents): instead of materializing N×N (or
+factor-sized) RBF kernels on the host, it builds an (N, r) Nyström or
+random-Fourier feature basis and selects through ``dpp.LowRank`` — the
+whole pipeline (r×r dual eigh, O(Nr) sampling) never touches an N×N
+matrix, so corpus-scale selection stops being memory-bound.
+
 Placement is a ``repro.dpp.runtime`` Runtime:
   ``Local()`` (default) — ``model.service()``: the factor
       eigendecompositions are cached once in a SpectralCache and
@@ -19,22 +26,28 @@ Placement is a ``repro.dpp.runtime`` Runtime:
 The pre-runtime ``backend="device"|"host"`` strings keep working as
 DeprecationWarning shims.
 
-The factor kernels can be LEARNED from batches that trained well (any subset
-signal) via ``model.fit`` — `fit_from_subsets` wires that in.
+The kernels can be LEARNED from batches that trained well (any subset
+signal) via ``model.fit`` — `fit_from_subsets` wires that in (KrK-Picard
+for Kron selectors, the dual-space learner for LowRank ones).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from ..core.dpp import SubsetBatch
-from ..dpp import Kron
+from ..dpp import Kron, LowRank
 from ..dpp import runtime as runtime_mod
+
+#: ``from_features(method="auto")`` switches to the low-rank route above
+#: this many documents — the dense route's host RBF blocks are O(N²)-ish
+#: in the worst factoring, and the LowRank model samples at O(Nr) anyway.
+LOWRANK_THRESHOLD = 2048
 
 
 def _rbf_kernel(X: np.ndarray, gamma: Optional[float] = None,
@@ -46,8 +59,9 @@ def _rbf_kernel(X: np.ndarray, gamma: Optional[float] = None,
 
 @dataclasses.dataclass
 class DPPBatchSelector:
-    """Samples diverse doc indices from a KronDPP over the corpus."""
-    dpp: Kron                    # the facade model over the corpus
+    """Samples diverse doc indices from a (Kron or LowRank) DPP over the
+    corpus."""
+    dpp: Union[Kron, LowRank]    # the facade model over the corpus
     n1: int
     n2: int
     #: execution placement (repro.dpp.runtime); None = Local()
@@ -67,11 +81,46 @@ class DPPBatchSelector:
     def from_features(doc_features: np.ndarray, n1: int, n2: int,
                       scale: float = 1.0,
                       runtime: Optional[runtime_mod.Runtime] = None,
-                      backend: Optional[str] = None) -> "DPPBatchSelector":
-        """Build factor kernels from doc features (n1*n2, d).
+                      backend: Optional[str] = None,
+                      method: str = "auto", rank: int = 32,
+                      features: str = "nystrom",
+                      threshold: int = LOWRANK_THRESHOLD,
+                      seed: int = 0) -> "DPPBatchSelector":
+        """Build a selection kernel from doc features (n1*n2, d).
 
-        L1: RBF over shard centroids; L2: RBF over within-shard mean offsets.
+        method="dense": the original Kron route — L1: RBF over shard
+        centroids; L2: RBF over within-shard mean offsets (host O(n1²) +
+        O(n2²) kernel blocks).
+        method="lowrank": an (N, rank) RBF feature basis over the RAW
+        per-document features (Nyström landmarks by default,
+        ``features="rff"`` for random Fourier features) wrapped in
+        ``dpp.LowRank`` — no N×N or factor-sized kernel is ever built,
+        and per-document structure that the dense route's centroid
+        averaging washes out is kept.
+        method="auto" (default): "lowrank" when n1*n2 > ``threshold``,
+        else "dense" — existing small-corpus callers keep their exact
+        kernels; large corpora stop paying O(N²)-class host work.
         """
+        if method not in ("auto", "dense", "lowrank"):
+            raise ValueError(
+                f"method must be auto|dense|lowrank, got {method!r}")
+        if method == "auto":
+            method = "lowrank" if n1 * n2 > int(threshold) else "dense"
+        if method == "lowrank":
+            # consumer scope: the feature maps come through the facade's
+            # re-exports, never repro.lowrank internals
+            from ..dpp import nystrom_features, random_fourier_features
+            X = np.asarray(doc_features, np.float64).reshape(n1 * n2, -1)
+            if features == "nystrom":
+                B = nystrom_features(X, rank=rank, seed=seed)
+            elif features == "rff":
+                B = random_fourier_features(X, rank=rank, seed=seed)
+            else:
+                raise ValueError(
+                    f"features must be nystrom|rff, got {features!r}")
+            model = LowRank(jnp.asarray(B * np.sqrt(scale), jnp.float32))
+            return DPPBatchSelector(model, n1, n2, runtime=runtime,
+                                    backend=backend)
         F = doc_features.reshape(n1, n2, -1)
         L1 = _rbf_kernel(F.mean(axis=1)) * scale
         L2 = _rbf_kernel(F.mean(axis=0)) * scale
@@ -103,7 +152,7 @@ class DPPBatchSelector:
         return np.asarray(self._buffer.pop(0), np.int64)
 
     def select(self, rng: np.random.Generator, batch_size: int) -> np.ndarray:
-        """Exact KronDPP sample, topped up / truncated to batch_size."""
+        """Exact DPP sample, topped up / truncated to batch_size."""
         idx = self._draw_subset(rng)
         if len(idx) > batch_size:
             idx = rng.permutation(idx)[:batch_size]
@@ -119,23 +168,34 @@ class DPPBatchSelector:
                          minibatch_size: Optional[int] = None,
                          schedule=None, log_every: int = 0,
                          ) -> "DPPBatchSelector":
-        """Adapt the kernels to observed 'good' batches via KrK-Picard,
-        run through ``model.fit`` (batch, or stochastic when
-        ``minibatch_size`` is set; pass a ``repro.dpp.schedules`` schedule
-        — e.g. ``armijo()`` — to guarantee PSD factors + monotone ascent)."""
+        """Adapt the kernel to observed 'good' batches through
+        ``model.fit``: KrK-Picard for Kron selectors (batch, or
+        stochastic when ``minibatch_size`` is set), the dual-space
+        Picard/projected-gradient learner for LowRank ones. Pass a
+        ``repro.dpp.schedules`` schedule — e.g. ``armijo()`` — for
+        monotone ascent."""
         k_max = max(len(s) for s in subsets)
         batch = SubsetBatch.from_lists(subsets, k_max)
         # learning follows the selector's placement (the host oracle has
-        # no learner — that combination trains locally)
+        # no learner — that combination trains locally; the lowrank
+        # learner is Local-only)
         fit_rt = self.runtime if self.runtime.kind != "host" else None
-        if fit_rt is not None and fit_rt.is_mesh:
-            batch = fit_rt.even_batch(batch)
-        rep = self.dpp.fit(batch,
-                           algorithm="krk" if minibatch_size is None
-                           else "krk-stochastic",
-                           iters=iters, a=a, schedule=schedule,
-                           minibatch_size=minibatch_size,
-                           track_ll=log_every > 0,
-                           log_every=log_every or iters,
-                           runtime=fit_rt)
+        if isinstance(self.dpp, LowRank):
+            rep = self.dpp.fit(batch, algorithm="lowrank", iters=iters,
+                               a=a, schedule=schedule,
+                               minibatch_size=minibatch_size,
+                               track_ll=log_every > 0,
+                               log_every=log_every or iters,
+                               runtime=None)
+        else:
+            if fit_rt is not None and fit_rt.is_mesh:
+                batch = fit_rt.even_batch(batch)
+            rep = self.dpp.fit(batch,
+                               algorithm="krk" if minibatch_size is None
+                               else "krk-stochastic",
+                               iters=iters, a=a, schedule=schedule,
+                               minibatch_size=minibatch_size,
+                               track_ll=log_every > 0,
+                               log_every=log_every or iters,
+                               runtime=fit_rt)
         return dataclasses.replace(self, dpp=rep.model)

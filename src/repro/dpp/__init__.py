@@ -53,11 +53,28 @@ from .model import (MAX_DENSE_N, Dense, DPPModel, Kron, from_factors,
                     from_kernel, random_kron)
 from .runtime import Host, Local, Mesh, Runtime
 
+# LowRank/DualSpectrum resolve lazily (PEP 562): repro.lowrank subclasses
+# .model's DPPModel, so an eager import here would be circular when the
+# lowrank package is imported first. Consumers spell it dpp.LowRank
+# either way — repro.lowrank internals stay behind this facade.
+_LOWRANK_EXPORTS = ("LowRank", "DualSpectrum", "nystrom_features",
+                    "random_fourier_features")
+
+
+def __getattr__(name):
+    if name in _LOWRANK_EXPORTS:
+        from .. import lowrank
+        value = getattr(lowrank, name)
+        globals()[name] = value      # cache: later lookups skip this hook
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
-    "DPPModel", "Dense", "Kron", "MAX_DENSE_N",
+    "DPPModel", "Dense", "Kron", "LowRank", "MAX_DENSE_N",
     "from_kernel", "from_factors", "random_kron",
     "functional", "schedules",
     "runtime", "Runtime", "Local", "Mesh", "Host",
-    "FactorSpectrum", "SpectralCache", "default_cache",
+    "FactorSpectrum", "DualSpectrum", "SpectralCache", "default_cache",
     "SamplingService", "SampleTicket",
+    "nystrom_features", "random_fourier_features",
 ]

@@ -137,6 +137,18 @@ def fit(model, batch: SubsetBatch, algorithm: str = "krk", iters: int = 10,
         configured, keeping the untracked path check-free.
     """
     from ..dpp import runtime as runtime_mod
+    if algorithm == "lowrank":
+        # the dual-space learner for LowRank(V, q) models — host-driven
+        # chunked sweeps in repro.lowrank.learn, same report/metrics/
+        # health contract; dispatched before the engine's ALGORITHMS
+        # check (its state is (V, q), not square factors)
+        from ..lowrank.learn import fit_lowrank
+        return fit_lowrank(model, batch, iters=iters, a=a,
+                           schedule=schedule,
+                           minibatch_size=minibatch_size, seed=seed,
+                           key=key, log_every=log_every,
+                           track_ll=track_ll, ll_mode=ll_mode,
+                           runtime=runtime, health=health)
     rt = runtime_mod.resolve(runtime, mesh=mesh, stacklevel=3)
     if rt.kind == "host":
         raise ValueError("learning has no host runtime; use Local() or "

@@ -1,0 +1,26 @@
+"""repro.lowrank — learned feature-based kernels in the rank-r dual space.
+
+The third kernel family behind the ``repro.dpp`` facade:
+``L = V diag(q) Vᵀ`` with a shared (N, r) diversity basis ``V`` and
+per-item quality scores ``q``. Everything — spectrum, sampling,
+log_prob, marginals, conditioning, MAP, learning — runs through the
+rank-r dual Gram ``C = Vᵀ diag(q) V`` (Kulesza & Taskar §3.3): one r×r
+eigh plus O(Nr) projections, never an N×N factorization. The dense
+kernel is materialized only under the facade's ``MAX_DENSE_N`` guard.
+
+Consumers import ``repro.dpp`` (which re-exports ``LowRank``), never
+this package directly — enforced by the ``facade-boundary`` analysis
+rule, same as ``repro.sampling`` / ``repro.learning``.
+"""
+
+from .dual import DualSpectrum, dual_spectrum
+from .features import nystrom_features, random_fourier_features
+from .model import LowRank
+
+__all__ = [
+    "DualSpectrum",
+    "LowRank",
+    "dual_spectrum",
+    "nystrom_features",
+    "random_fourier_features",
+]

@@ -1,0 +1,372 @@
+"""Dual-space maximum-likelihood learning for ``LowRank(V, q)``.
+
+``fit(batch, algorithm="lowrank")`` lands here. One sweep is:
+
+1. **q Picard step** — the fixed-point update of Mariet & Sra's
+   (arXiv:1508.00792) Picard iteration restricted to the quality scores:
+   ∂φ/∂log q_i = p̂_i − K_ii (empirical inclusion frequency minus model
+   singleton marginal), giving the multiplicative update
+   q_i ← q_i · ((p̂_i + ε)/(K_ii + ε))^a. K_ii comes off the dual:
+   K = φ(C+I)⁻¹φᵀ, one r×r solve, O(Nr²) total.
+2. **projected-gradient V step** — ascend ∇_V of the exact low-rank
+   objective φ = mean log det(φ_Y φ_Yᵀ) − log det(I_r + C), then fold
+   each row's norm into q (row-normalizing V), which leaves the kernel
+   φφᵀ bit-unchanged but keeps the basis/quality factorization
+   identified.
+
+Both half-updates share one step scale: with an Armijo schedule the
+whole sweep is backtracked against the pre-sweep likelihood (a = 0 is a
+fixed point), so accepted sweeps never decrease the tracked objective.
+With ``item_features=`` the scores become a learned feature map
+q = softplus(X·w + b) and the sweep is a joint gradient step on
+(V, w, b) — same Armijo guard, no Picard step and no row-norm folding
+(q is no longer a free parameter).
+
+Everything is O(N r² + n k² r) per sweep — like sampling, the learner
+never materializes (or factorizes) anything N×N. Spans
+(``learning.fit`` / ``learning.chunk``), ``learning.*`` metrics and
+``HealthMonitor`` verdicts have parity with the engine learners; the
+dual eigenvalues stand in for the factor spectrum in the health checks.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import obs
+from ..core.dpp import SubsetBatch
+from ..learning import schedules as schedules_mod
+from ..learning.engine import LearnerState, emit_sweep_metrics
+from ..learning.schedules import _ASCENT_TOL
+
+_EPS = 1e-3      # Picard ratio smoothing
+_RIDGE = 1e-6    # subset-Gram jitter: keeps ∇ log det finite near rank edge
+
+
+def _log_likelihood(V, q, indices, mask):
+    """Mean log P(Y) of the padded batch under L = V diag(q) Vᵀ, via the
+    dual: per-subset |Y|×|Y| Grams of feature rows (ridged so gradients
+    stay finite when a subset touches the rank boundary) and the r×r
+    normalizer det(I_r + C)."""
+    phi = V * jnp.sqrt(jnp.maximum(q, 0.0))[:, None]
+    C = phi.T @ phi
+    r = C.shape[0]
+    eye_r = jnp.eye(r, dtype=C.dtype)
+
+    def one(idx, msk):
+        P = phi[idx]
+        S = P @ P.T + _RIDGE * jnp.eye(P.shape[0], dtype=P.dtype)
+        m2 = jnp.outer(msk, msk)
+        Sm = jnp.where(m2, S, jnp.eye(P.shape[0], dtype=P.dtype))
+        return jnp.linalg.slogdet(Sm)[1]
+
+    lds = jax.vmap(one)(indices, mask)
+    log_z = jnp.linalg.slogdet(eye_r + C)[1]
+    return jnp.mean(lds) - log_z
+
+
+def _marginal_diag(V, q):
+    """K_ii = [φ(C+I)⁻¹φᵀ]_ii — one r×r cholesky solve, O(Nr²)."""
+    phi = V * jnp.sqrt(jnp.maximum(q, 0.0))[:, None]
+    C = phi.T @ phi
+    r = C.shape[0]
+    chol = jnp.linalg.cholesky(C + jnp.eye(r, dtype=C.dtype))
+    X = jax.scipy.linalg.cho_solve((chol, True), phi.T)   # (C+I)⁻¹ φᵀ
+    return jnp.sum(phi * X.T, axis=1)
+
+
+def _backtrack(sched: schedules_mod.Schedule, update_fn, ll_fn, ll_ref,
+               a_trial):
+    """Armijo halving on the whole-sweep update — ``armijo_halfstep``'s
+    loop without the square-factor PD check (V is N×r; PSD of the kernel
+    is automatic from the φφᵀ parameterization)."""
+    params0 = update_fn(jnp.zeros_like(a_trial))
+
+    def evaluate(a):
+        cand = update_fn(a)
+        ll = ll_fn(cand)
+        ok = (ll >= ll_ref - _ASCENT_TOL) & jnp.isfinite(ll)
+        return cand, ll, ok
+
+    cand0, ll0, ok0 = evaluate(a_trial)
+
+    def cond(carry):
+        _, _, ok, _, k = carry
+        return (~ok) & (k < sched.max_backtracks)
+
+    def body(carry):
+        a, _, _, _, k = carry
+        a = a * sched.shrink
+        cand, ll, ok = evaluate(a)
+        return a, cand, ok, ll, k + 1
+
+    a, cand, ok, ll, k = jax.lax.while_loop(
+        cond, body, (a_trial, cand0, ok0, ll0, jnp.zeros((), jnp.int32)))
+    pick = lambda new, old: jax.tree_util.tree_map(
+        lambda x, y: jnp.where(ok, x, y), new, old)
+    return pick(cand, params0), jnp.where(ok, ll, ll_ref), \
+        jnp.where(ok, a, 0.0), k
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sched", "use_armijo", "v_step"))
+def _sweep_picard(V, q, indices, mask, p_hat, a_t, sched, use_armijo,
+                  v_step):
+    """One (q-Picard, V-gradient) sweep; returns (V, q, ll, a_used, bt).
+
+    The V ascent direction and K_ii are computed once at the pre-sweep
+    point; ``update(a)`` scales both half-updates, so the Armijo guard
+    backtracks the sweep as a unit and a = 0 recovers the input exactly.
+    """
+    Kd = _marginal_diag(V, q)
+    ll_ref, g = jax.value_and_grad(
+        lambda Vv: _log_likelihood(Vv, q, indices, mask))(V)
+
+    def update(a):
+        aq = jnp.minimum(a, 1.0)
+        q1 = q * ((p_hat + _EPS) / (Kd + _EPS)) ** aq
+        V1 = V + (a * v_step) * g
+        return V1, q1
+
+    if use_armijo:
+        (V1, q1), ll, a_used, n_bt = _backtrack(
+            sched, update,
+            lambda p: _log_likelihood(p[0], p[1], indices, mask),
+            ll_ref, a_t)
+    else:
+        V1, q1 = update(a_t)
+        ll = _log_likelihood(V1, q1, indices, mask)
+        a_used = a_t
+        n_bt = jnp.zeros((), jnp.int32)
+    # projection: fold row norms into q — the kernel φφᵀ is unchanged,
+    # the (basis, quality) split stays identified
+    n2 = jnp.sum(V1 * V1, axis=1)
+    q2 = q1 * n2
+    V2 = V1 * jax.lax.rsqrt(jnp.maximum(n2, 1e-20))[:, None]
+    return V2, q2, ll, a_used, n_bt
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sched", "use_armijo", "v_step"))
+def _sweep_features(V, w, b, X, indices, mask, a_t, sched, use_armijo,
+                    v_step):
+    """One joint gradient sweep on (V, w, b) with q = softplus(X·w + b)."""
+    def ll_of(params):
+        Vv, wv, bv = params
+        return _log_likelihood(Vv, jax.nn.softplus(X @ wv + bv),
+                               indices, mask)
+
+    ll_ref, g = jax.value_and_grad(ll_of)((V, w, b))
+
+    def update(a):
+        return (V + (a * v_step) * g[0], w + a * g[1], b + a * g[2])
+
+    if use_armijo:
+        (V1, w1, b1), ll, a_used, n_bt = _backtrack(
+            sched, update, ll_of, ll_ref, a_t)
+    else:
+        V1, w1, b1 = update(a_t)
+        ll = ll_of((V1, w1, b1))
+        a_used = a_t
+        n_bt = jnp.zeros((), jnp.int32)
+    return V1, w1, b1, ll, a_used, n_bt
+
+
+def _empirical_inclusion(batch: SubsetBatch, n_items: int) -> np.ndarray:
+    """p̂_i = fraction of observed subsets containing item i."""
+    idx = np.asarray(batch.indices)
+    msk = np.asarray(batch.mask)
+    counts = np.zeros(n_items, np.float64)
+    np.add.at(counts, idx[msk], 1.0)
+    return counts / max(1, idx.shape[0])
+
+
+def fit_lowrank(model, batch: SubsetBatch, iters: int = 10, a: float = 1.0,
+                schedule: Optional[schedules_mod.Schedule] = None,
+                minibatch_size: Optional[int] = None, seed: int = 0,
+                key: Optional[jax.Array] = None, log_every: int = 1,
+                track_ll: bool = True, ll_mode: Optional[str] = None,
+                runtime=None, health=None, item_features=None,
+                v_step: float = 0.1):
+    """Fit ``LowRank(V, q)`` (or, with ``item_features=``, the feature
+    map q = softplus(X·w + b)) to a subset batch. Called through
+    ``repro.learning.fit(..., algorithm="lowrank")`` — see the module
+    docstring for the update; the report/metrics/health contract matches
+    the engine learners."""
+    from ..dpp import runtime as runtime_mod
+    from ..learning.api import FitReport
+    from .model import LowRank
+
+    rt = runtime_mod.resolve(runtime)
+    if rt.kind != "local":
+        raise ValueError(
+            "the lowrank learner runs on the Local runtime (its updates "
+            "are O(Nr²); item-axis sharding is an open ROADMAP item), "
+            f"got {rt.kind!r}")
+    if isinstance(model, LowRank):
+        V = model.V
+        q = model.q
+    else:
+        V, q = model
+        V = jnp.asarray(V)
+        q = jnp.asarray(q, V.dtype)
+    N = int(V.shape[0])
+    if schedule is None:
+        schedule = schedules_mod.armijo(a0=a)
+    use_armijo = schedule.kind == "armijo"
+    if ll_mode is None:
+        ll_mode = "sweep" if track_ll else "none"
+    if minibatch_size is not None and minibatch_size > batch.n:
+        raise ValueError(
+            f"cannot draw minibatches of {minibatch_size} from a batch "
+            f"of {batch.n} subsets")
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+
+    X = None
+    if item_features is not None:
+        X = jnp.asarray(item_features, V.dtype)
+        if X.shape[0] != N:
+            raise ValueError(
+                f"item_features must have {N} rows to match V, got "
+                f"{X.shape}")
+        w = jnp.zeros((X.shape[1],), V.dtype)
+        # init b so softplus(b) reproduces the incoming q on average —
+        # the feature map starts at (roughly) the current kernel
+        b = jnp.asarray(
+            np.log(np.expm1(max(float(jnp.mean(q)), 1e-6))), V.dtype)
+
+    p_hat = jnp.asarray(_empirical_inclusion(batch, N), V.dtype)
+    sched = schedules_mod.init_state(schedule)
+    indices_full = batch.indices
+    mask_full = batch.mask
+    ll0 = float(_log_likelihood(
+        V, q if X is None else jax.nn.softplus(X @ w + b),
+        indices_full, mask_full))
+
+    def current_params():
+        return (V, q) if X is None else (V, w, b)
+
+    def dual_eigs():
+        phi = V * jnp.sqrt(jnp.maximum(
+            q if X is None else jax.nn.softplus(X @ w + b), 0.0))[:, None]
+        return jnp.maximum(jnp.linalg.eigvalsh(phi.T @ phi), 0.0)
+
+    if isinstance(health, obs.HealthMonitor):
+        monitor = health
+    elif isinstance(health, obs.HealthThresholds):
+        monitor = obs.HealthMonitor(thresholds=health, component="learning")
+    elif health is None and obs.enabled(obs.current_tracker()):
+        monitor = obs.HealthMonitor(component="learning")
+    else:
+        monitor = None
+    if monitor is not None:
+        # the r dual eigenvalues ARE the kernel's nonzero spectrum, so
+        # they feed the PSD-margin/condition sentinels directly (the
+        # "em" parameterization of check_learning)
+        monitor.check_learning((dual_eigs(),), "em",
+                               ll=ll0 if ll_mode != "none" else None)
+
+    lls: List[float] = []
+    ll_sweeps: List[int] = []
+    if ll_mode != "none":
+        lls.append(ll0)
+        ll_sweeps.append(0)
+
+    state = LearnerState(params=current_params(),
+                         sweep=jnp.zeros((), jnp.int32), key=key,
+                         sched=sched, ll=jnp.asarray(ll0))
+    times: List[float] = []
+    tracker = obs.current_tracker()
+    track = obs.enabled(tracker)
+    prev_bt = 0
+    done = 0
+    with obs.spans.start_span("learning.fit", algorithm="lowrank",
+                              runtime=rt.kind, iters=iters):
+        while done < iters:
+            n = min(max(1, log_every), iters - done)
+            chunk_lls = []
+            t0 = time.perf_counter()
+            with obs.spans.start_span("learning.chunk", tracker=tracker,
+                                      sweeps=n, algorithm="lowrank"):
+                for _ in range(n):
+                    key, k_sel = jax.random.split(key)
+                    if minibatch_size is not None:
+                        rows = jax.random.choice(
+                            k_sel, batch.n, (minibatch_size,),
+                            replace=False)
+                        indices = indices_full[rows]
+                        mask = mask_full[rows]
+                    else:
+                        indices, mask = indices_full, mask_full
+                    a_t = schedules_mod.trial_step(schedule, sched)
+                    if X is None:
+                        V, q, ll, a_used, n_bt = _sweep_picard(
+                            V, q, indices, mask, p_hat, a_t,
+                            sched=schedule, use_armijo=use_armijo,
+                            v_step=float(v_step))
+                    else:
+                        V, w, b, ll, a_used, n_bt = _sweep_features(
+                            V, w, b, X, indices, mask, a_t,
+                            sched=schedule, use_armijo=use_armijo,
+                            v_step=float(v_step))
+                    sched = schedules_mod.advance(schedule, sched,
+                                                  a_used, n_bt)
+                    if ll_mode == "sweep":
+                        chunk_lls.append(ll)
+                jax.block_until_ready(current_params())
+            times.append(time.perf_counter() - t0)
+            done += n
+            if ll_mode == "sweep":
+                lls.extend(float(x) for x in chunk_lls)
+                ll_sweeps.extend(range(done - n + 1, done + 1))
+                last_ll = jnp.asarray(chunk_lls[-1])
+            elif ll_mode == "chunk":
+                last_ll = _log_likelihood(
+                    V, q if X is None else jax.nn.softplus(X @ w + b),
+                    indices_full, mask_full)
+                lls.append(float(last_ll))
+                ll_sweeps.append(done)
+            else:
+                last_ll = state.ll
+            state = LearnerState(params=current_params(),
+                                 sweep=state.sweep + n, key=key,
+                                 sched=sched, ll=last_ll)
+            bt_now = int(state.sched.backtracks)
+            new_lls = lls[len(lls) - n:] if ll_mode == "sweep" \
+                else lls[-1:] if ll_mode == "chunk" else []
+            if track:
+                emit_sweep_metrics(
+                    tracker, algorithm="lowrank", runtime="local",
+                    seconds=times[-1], sweeps=n, state=state,
+                    prev_backtracks=prev_bt, lls=new_lls,
+                    first_sweep=done - len(new_lls) + 1)
+            if monitor is not None:
+                monitor.check_learning(
+                    (dual_eigs(),), "em",
+                    ll=new_lls[-1] if new_lls else None,
+                    backtracks=bt_now - prev_bt)
+            prev_bt = bt_now
+
+    total_t = sum(times)
+    sweeps_per_sec = (iters / total_t) if total_t > 0 else float("inf")
+    health_report = monitor.report(emit=True) if monitor is not None \
+        else None
+    if track:
+        tracker.event(
+            "learning.fit", algorithm="lowrank", runtime=rt.kind,
+            sweeps=int(state.sweep), iters=iters,
+            sweeps_per_sec=sweeps_per_sec,
+            log_likelihood=(lls[-1] if lls else None),
+            backtracks=int(state.sched.backtracks))
+    q_final = q if X is None else jax.nn.softplus(X @ w + b)
+    return FitReport(
+        model=LowRank(V, q_final), state=state, log_likelihoods=lls,
+        ll_sweeps=ll_sweeps, sweep_times=times, sweeps=int(state.sweep),
+        sweeps_per_sec=sweeps_per_sec, health=health_report)

@@ -278,6 +278,12 @@ def sample_krondpp_batched(key: jax.Array, spectrum: FactorSpectrum,
     if k_max is None:
         k_max = spectrum.suggested_k_max()
     keys = jax.random.split(key, num_samples)
+    # duck-typed dispatch: spectra that carry their own row sampler (the
+    # low-rank DualSpectrum) bypass the Kronecker eigenvector machinery —
+    # same (picks, counts, truncated) contract, same per-key determinism
+    rows_hook = getattr(spectrum, "sample_rows", None)
+    if rows_hook is not None:
+        return rows_hook(keys, int(k_max), backend=backend, runtime=runtime)
     lams, vecs = tuple(spectrum.lams), tuple(spectrum.vecs)
     if runtime is not None and getattr(runtime, "is_mesh", False):
         # spectra flow through operands (not closures) so the mesh can
@@ -309,6 +315,10 @@ def sample_krondpp_keyed(row_keys: jax.Array, spectrum: FactorSpectrum,
     """
     if k_max is None:
         k_max = spectrum.suggested_k_max()
+    rows_hook = getattr(spectrum, "sample_rows", None)
+    if rows_hook is not None:
+        return rows_hook(row_keys, int(k_max), backend=backend,
+                         runtime=runtime)
     lams, vecs = tuple(spectrum.lams), tuple(spectrum.vecs)
     if runtime is not None and getattr(runtime, "is_mesh", False):
         return runtime.map_keys(

@@ -126,6 +126,11 @@ def sample_kdpp_batched(key: jax.Array, spectrum: FactorSpectrum, k: int,
     the single-device call bit-for-bit on shared keys.
     """
     keys = jax.random.split(key, num_samples)
+    # duck-typed dispatch, as in sample_krondpp_batched: low-rank dual
+    # spectra run the conditional draw on their r dual eigenvalues
+    kdpp_hook = getattr(spectrum, "sample_rows_kdpp", None)
+    if kdpp_hook is not None:
+        return kdpp_hook(keys, int(k), backend=backend, runtime=runtime)
     lams, vecs = tuple(spectrum.lams), tuple(spectrum.vecs)
     if runtime is not None and getattr(runtime, "is_mesh", False):
         return runtime.map_keys(

@@ -205,6 +205,54 @@ class SpectralCache:
         lam, vec = self._factor(L)
         return FactorSpectrum((lam,), (vec,))
 
+    def spectrum_lowrank(self, V: jax.Array, q: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """``(phi, lams, W)`` for the rank-r dual of L = V diag(q) Vᵀ.
+
+        phi = V·√q (N, r); ``lams``/``W`` eigendecompose the r×r dual Gram
+        C = φᵀφ = Vᵀ diag(q) V, which shares its nonzero spectrum with L
+        (Kulesza & Taskar §3.3) — the ONLY factorization on this path, so
+        a low-rank model never pays an N×N eigh. Keyed on
+        ``(id(V), id(q))``: a q-only update (per-tenant quality reweight)
+        reuses nothing stale and costs exactly one fresh r×r eigh, while
+        repeat lookups of the same (V, q) pair are hits. The entry pins
+        strong references to both arrays, same as ``_factor``."""
+        tracker = obs.current_tracker()
+        r = int(V.shape[1])
+        key = ("lowrank", id(V), id(q), tuple(V.shape), tuple(q.shape),
+               str(V.dtype))
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                self.hits += 1
+                tracker.counter("spectral_cache.hits")
+                self._entries.move_to_end(key)
+                return hit[1], hit[2], hit[3]
+            self.misses += 1
+            tracker.counter("spectral_cache.misses")
+
+            def _dual():
+                phi = V * jnp.sqrt(jnp.maximum(q, 0.0))[:, None]
+                C = phi.T @ phi
+                lam, W = jnp.linalg.eigh(0.5 * (C + C.T))
+                return phi, jnp.maximum(lam, 0.0), W
+
+            if obs.enabled(tracker):
+                # timer/span tagged n=r: the zero-N×N-eigh acceptance test
+                # reads these tags to prove the hot path never factors N×N
+                with obs.spans.start_span("spectral_cache.eigh",
+                                          tracker=tracker, n=r):
+                    with tracker.timer("spectral_cache.eigh_s", n=r):
+                        phi, lam, W = jax.block_until_ready(_dual())
+            else:
+                phi, lam, W = _dual()
+            self._entries[key] = ((V, q), phi, lam, W)  # pins both ids
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+                tracker.counter("spectral_cache.evictions")
+            return phi, lam, W
+
 
 def gain_for_expected_size(log_lams: "jax.Array", target: float,
                            iters: int = 100) -> float:

@@ -32,7 +32,7 @@ shared service's sentinels.
 from __future__ import annotations
 
 import time
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 from .. import obs
 # serving wraps the sync SamplingService engine directly (PR 8 design);
@@ -100,6 +100,15 @@ class AsyncSamplingService(ContinuousBatcher):
     an existing (thread-safe) synchronous service — sync and async
     traffic then aggregate in one ``service.stats``.
 
+    ``tenant_models=`` maps tenant names to their own models (typically
+    ``dpp.LowRank`` sharing one basis V with per-tenant quality scores
+    q): each named tenant samples from its own kernel through its own
+    engine, all engines sharing one SpectralCache — so per-tenant q
+    costs one r×r dual eigh per tenant, never an N×N factorization. A
+    flush groups tickets by engine and issues one device call per
+    distinct kernel; tenants without an entry fall back to ``dpp=`` /
+    ``service=`` (if neither exists, ``submit`` raises ``KeyError``).
+
     Usage::
 
         svc = model.serving(ServingConfig(max_batch=64, deadline_ms=5.0),
@@ -111,9 +120,11 @@ class AsyncSamplingService(ContinuousBatcher):
 
     def __init__(self, dpp=None, config: Optional[ServingConfig] = None, *,
                  service: Optional[SamplingService] = None, tenants=None,
-                 seed: int = 0, k_max: Optional[int] = None, cache=None,
+                 tenant_models=None, seed: int = 0,
+                 k_max: Optional[int] = None, cache=None,
                  runtime=None, tracker=None):
         super().__init__(config, tenants=tenants, tracker=tracker)
+        self.service = None
         if service is not None:
             self.service = service
         elif dpp is not None:
@@ -121,18 +132,41 @@ class AsyncSamplingService(ContinuousBatcher):
                 dpp, k_max=k_max, cache=cache, seed=seed,
                 max_batch=self.config.max_batch, runtime=runtime,
                 tracker=tracker)
-        else:
-            raise TypeError("AsyncSamplingService needs a dpp model or an "
-                            "existing service=")
+        # per-tenant kernels (the low-rank "shared basis V, per-tenant
+        # quality q" pattern): each tenant gets its own engine over its
+        # model, all sharing one SpectralCache / runtime / tracker, so a
+        # shared-V LowRank fleet costs one r×r dual eigh per tenant and
+        # zero N×N work. Immutable after construction — the flush thread
+        # only ever reads it, so no lock is needed.
+        self._services = {}
+        for name, model in (tenant_models or {}).items():
+            self._services[name] = SamplingService(
+                model, k_max=k_max, cache=cache, seed=seed,
+                max_batch=self.config.max_batch, runtime=runtime,
+                tracker=tracker)
+            self.register_tenant(name)
+        if self.service is None and not self._services:
+            raise TypeError("AsyncSamplingService needs a dpp model, an "
+                            "existing service=, or tenant_models=")
         self._keyring = TenantKeyring(seed)
         self.stats = ServingStats(self._metrics)
+
+    def _service_for(self, tenant: str) -> SamplingService:
+        svc = self._services.get(tenant, self.service)
+        if svc is None:
+            raise KeyError(
+                f"unknown tenant {tenant!r}: not in tenant_models and no "
+                f"default model/service was configured")
+        return svc
 
     # -- request path -------------------------------------------------------
     def submit(self, num_samples: int, tenant: str = "default"
                ) -> AsyncTicket:
         """Enqueue; returns a futures ticket. Raises ``QueueFull`` /
         ``ServiceClosed`` (typed, structured) instead of queuing into
-        unbounded latency."""
+        unbounded latency, and ``KeyError`` synchronously for a tenant
+        with neither a per-tenant model nor a default service."""
+        self._service_for(tenant)      # unknown-tenant check, fail fast
         return self._enqueue(AsyncTicket(tenant, num_samples))
 
     def sample(self, num_samples: int, tenant: str = "default",
@@ -142,17 +176,41 @@ class AsyncSamplingService(ContinuousBatcher):
 
     # -- background flush ---------------------------------------------------
     def _flush(self, batch: List[AsyncTicket], trigger: str) -> None:
-        svc = self.service
+        # one device call per distinct engine: tickets group by their
+        # tenant's service (insertion-ordered, so the default-model group
+        # keeps the old single-group behavior byte-for-byte). Draws stay
+        # batching-invariant regardless of grouping — every row is keyed
+        # by (tenant, seq, row), never by its position in a flush.
+        tr = self.tracker
+        flush_t0 = time.perf_counter()
+        groups: List[Tuple[SamplingService, List[AsyncTicket]]] = []
+        by_id = {}
+        for t in batch:
+            svc = self._service_for(t.tenant)
+            g = by_id.get(id(svc))
+            if g is None:
+                g = (svc, [])
+                by_id[id(svc)] = g
+                groups.append(g)
+            g[1].append(t)
+        for svc, tickets in groups:
+            self._flush_group(svc, tickets, trigger)
+        tr.gauge("serving.requests_per_flush", len(batch))
+        tr.observe("serving.flush_s", time.perf_counter() - flush_t0,
+                   trigger=trigger, tickets=len(batch))
+
+    def _flush_group(self, svc: SamplingService,
+                     tickets: List[AsyncTicket], trigger: str) -> None:
         tr = self.tracker
         ext = self._external_tracker()
         span_ext = ext if obs.enabled(ext) else None
         t0 = time.perf_counter()
         w0 = time.time()
-        total = sum(t.num_samples for t in batch)
+        total = sum(t.num_samples for t in tickets)
         padded = svc._round_up(total)
-        row_keys = self._keyring.row_keys(batch, padded)
+        row_keys = self._keyring.row_keys(tickets, padded)
         t1 = time.perf_counter()
-        carrier = batch[0]
+        carrier = tickets[0]
         live = obs.spans.NULL_SPAN if span_ext is None else \
             obs.spans.start_span("device-call", tracker=span_ext,
                                  parent=(carrier.trace_id, carrier._span_id),
@@ -162,23 +220,21 @@ class AsyncSamplingService(ContinuousBatcher):
             rows, truncations, collapsed = svc.draw_keyed(row_keys)
         t2 = time.perf_counter()
         off = 0
-        for t in batch:
+        for t in tickets:
             t._resolve(rows[off: off + t.num_samples])
             off += t.num_samples
         t3 = time.perf_counter()
-        for t in batch:
+        for t in tickets:
             tr.observe("serving.latency_s", t3 - t._submitted,
                        tenant=t.tenant)
             tr.observe("serving.queue_wait_s", t0 - t._submitted,
                        tenant=t.tenant)
-        # requested rows per padded row (utilization, <= 1) and requests
-        # per device call (coalescing, the "occupancy > 1" serving claim)
+        # requested rows per padded row (utilization, <= 1); requests
+        # per device call (the "occupancy > 1" coalescing claim) is a
+        # whole-flush gauge emitted by _flush
         tr.gauge("serving.batch_occupancy", total / max(1, padded))
-        tr.gauge("serving.requests_per_flush", len(batch))
-        tr.observe("serving.flush_s", t3 - t0, trigger=trigger,
-                   tickets=len(batch))
         svc.health.check_sampling(drawn=padded, truncated=truncations,
                                   collapsed=collapsed)
         if span_ext is not None:
             svc.health.report(emit=True, tracker=span_ext)
-            emit_flush_spans(span_ext, batch, carrier, w0, t0, t1, t2, t3)
+            emit_flush_spans(span_ext, tickets, carrier, w0, t0, t1, t2, t3)

@@ -1,9 +1,10 @@
-"""The ``repro.dpp`` facade: one shared property suite over ``Dense`` and
-m=2 ``Kron`` (both are the same protocol, so they are tested by the same
-code), closure operations (``condition`` / ``marginal``) validated against
-brute-force enumeration over the full kernel at small N, the deprecation
-contract of the pre-facade free functions, and the architectural rule that
-every consumer layer routes through ``repro.dpp``.
+"""The ``repro.dpp`` facade: one shared property suite over ``Dense``,
+m=2 ``Kron`` and full-rank ``LowRank`` (all three are the same protocol,
+so they are tested by the same code), closure operations (``condition`` /
+``marginal``) validated against brute-force enumeration over the full
+kernel at small N, the deprecation contract of the pre-facade free
+functions, and the architectural rule that every consumer layer routes
+through ``repro.dpp``.
 """
 
 import itertools
@@ -25,11 +26,17 @@ N = 6          # ground set size — small enough to enumerate all 2^N subsets
 def _make_model(kind: str):
     if kind == "kron":
         return dpp.random_kron(jax.random.PRNGKey(5), (2, 3))
+    if kind == "lowrank":
+        # full-rank r = N so brute-force enumeration semantics hold on
+        # every subset (a rank-deficient basis would send |Y| > r to -inf)
+        V = jax.random.normal(jax.random.PRNGKey(6), (N, N)) * 0.6
+        q = jnp.abs(jax.random.normal(jax.random.PRNGKey(7), (N,))) + 0.5
+        return dpp.LowRank(V, q)
     kern = dpp.random_kron(jax.random.PRNGKey(5), (2, 3)).dense_kernel()
     return dpp.from_kernel(kern)
 
 
-@pytest.fixture(scope="module", params=["dense", "kron"])
+@pytest.fixture(scope="module", params=["dense", "kron", "lowrank"])
 def model(request):
     return _make_model(request.param)
 
@@ -128,7 +135,10 @@ def test_condition_matches_bruteforce(model, oracle):
     probs, _ = oracle
     A = [2]
     cond = model.condition(A)
-    assert type(cond) is dpp.Dense           # closure returns a dense model
+    # closure: LowRank conditions in feature space and stays LowRank;
+    # Dense/Kron close over the dense Schur complement
+    want_type = dpp.LowRank if type(model) is dpp.LowRank else dpp.Dense
+    assert type(cond) is want_type
     comp = [i for i in range(N) if i not in A]
     assert cond.N == len(comp)
     Z_A = sum(p for Y, p in probs.items() if set(A) <= set(Y))
@@ -244,6 +254,10 @@ def test_fit_returns_wrapped_model_and_ascends(model):
         assert type(rep.model) is dpp.Kron           # krk default
         lls = rep.log_likelihoods
         assert all(b >= a - 1e-3 for a, b in zip(lls, lls[1:])), lls
+    elif isinstance(model, dpp.LowRank):
+        assert type(rep.model) is dpp.LowRank        # dual learner default
+        lls = rep.log_likelihoods
+        assert all(b >= a - 1e-3 for a, b in zip(lls, lls[1:])), lls
     else:
         assert type(rep.model) is dpp.Dense          # em default
     # the fitted model is a full facade citizen
@@ -265,6 +279,29 @@ def test_service_runs_off_facade_model(model):
     rows = svc.sample(5)
     assert len(rows) == 5
     assert all(all(0 <= i < N for i in r) for r in rows)
+
+
+def test_lowrank_q_update_costs_one_dual_eigh():
+    """The per-tenant pattern — shared basis V, swapped quality q — must
+    cost exactly one extra r×r dual eigh per q (no miss storm: every
+    facade call on the same (V, q) pair is a cache hit)."""
+    cache = dpp.SpectralCache()
+    V = jax.random.normal(jax.random.PRNGKey(0), (N, 4))
+    m1 = dpp.LowRank(V, jnp.ones(N))
+    m1.expected_size(cache=cache)
+    m1.marginal(0, cache=cache)
+    m1.log_prob(m1.sample(jax.random.PRNGKey(1), 4, cache=cache),
+                cache=cache)
+    assert cache.stats()["misses"] == 1
+    q2 = jnp.full((N,), 2.0)
+    m2 = dpp.LowRank(V, q2)
+    m2.expected_size(cache=cache)
+    m2.log_prob(m2.sample(jax.random.PRNGKey(2), 4, cache=cache),
+                cache=cache)
+    stats = cache.stats()
+    assert stats["misses"] == 2          # one r×r eigh for the new q
+    assert stats["evictions"] == 0
+    assert stats["hits"] >= 4
 
 
 # ---------------------------------------------------------------------------

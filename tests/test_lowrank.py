@@ -1,0 +1,348 @@
+"""repro.lowrank — the dual-space subsystem behind ``dpp.LowRank``.
+
+Covers what the shared facade suite (test_dpp_facade.py, which now runs
+its whole property battery over a full-rank LowRank) cannot: the dual
+spectrum against dense eigendecomposition, rank-deficient semantics
+(|Y| > r has probability zero), the zero-N×N-eigh guarantee on the hot
+path (asserted through SpectralCache stats + obs timer tags), the dual
+learner's modes, multi-tenant serving over per-tenant q, and the data
+pipeline's low-rank selection route.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import dpp, obs
+from repro.core import SubsetBatch
+from repro.core.dpp import enumerate_probabilities, marginal_kernel
+
+
+def _model(N=8, r=3, seed=0, qscale=1.0):
+    V = jax.random.normal(jax.random.PRNGKey(seed), (N, r)) * 0.7
+    q = (jnp.abs(jax.random.normal(jax.random.PRNGKey(seed + 1), (N,)))
+         + 0.4) * qscale
+    return dpp.LowRank(V, q)
+
+
+# ---------------------------------------------------------------------------
+# dual spectrum
+# ---------------------------------------------------------------------------
+
+def test_dual_spectrum_matches_dense_eigendecomposition():
+    m = _model(N=10, r=4)
+    spec = m.spectrum(cache=dpp.SpectralCache())
+    assert spec.N == 10 and spec.rank == 4
+    L = np.asarray(m.dense_kernel())
+    dense_top = np.sort(np.linalg.eigvalsh(L))[-4:]
+    np.testing.assert_allclose(np.sort(np.asarray(spec.lams)), dense_top,
+                               rtol=1e-4, atol=1e-5)
+    # E|Y| and the marginal kernel agree with the dense route
+    K = np.asarray(marginal_kernel(L))
+    np.testing.assert_allclose(m.expected_size(), np.trace(K), rtol=1e-4)
+    idx = [0, 3, 7]
+    np.testing.assert_allclose(
+        np.asarray(m.marginal_kernel_submatrix(idx)),
+        K[np.ix_(idx, idx)], rtol=1e-3, atol=1e-5)
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="must be"):
+        dpp.LowRank(jnp.ones((4,)))                  # V not 2-D
+    with pytest.raises(ValueError, match="q must be"):
+        dpp.LowRank(jnp.ones((4, 2)), jnp.ones((3,)))
+    m = dpp.LowRank(jnp.ones((4, 2)))                # q defaults to ones
+    np.testing.assert_allclose(np.asarray(m.q), 1.0)
+    with pytest.raises(TypeError, match="factor"):
+        m.factors
+    with pytest.raises(ValueError, match="max_dense"):
+        _model(N=6, r=2).dense_kernel(max_dense=4)
+
+
+# ---------------------------------------------------------------------------
+# rank-deficiency semantics
+# ---------------------------------------------------------------------------
+
+def test_log_prob_beyond_rank_is_zero_probability():
+    m = _model(N=8, r=3)
+    over = SubsetBatch.from_lists([[0, 1, 2, 3], [1, 2, 4, 5, 6]], k_max=5)
+    lp = np.asarray(m.log_prob(over))
+    assert (lp < -8.0).all()        # -inf, or float-noise around a 0 det
+    # total probability over ALL subsets is still 1 (the oracle model
+    # assigns the beyond-rank mass exactly 0)
+    probs = enumerate_probabilities(np.asarray(m.dense_kernel()))
+    assert sum(probs.values()) == pytest.approx(1.0, abs=1e-4)
+    # and on the support the dual log_prob matches enumeration
+    subsets = [[0], [2, 5], [1, 4, 7]]
+    lp_in = np.asarray(m.log_prob(SubsetBatch.from_lists(subsets)))
+    ref = [np.log(probs[tuple(sorted(s))]) for s in subsets]
+    np.testing.assert_allclose(lp_in, ref, rtol=1e-3, atol=1e-4)
+
+
+def test_samples_never_exceed_rank():
+    m = _model(N=12, r=3, qscale=30.0)     # push E|Y| toward the rank
+    batch = m.sample(jax.random.PRNGKey(0), 500, cache=dpp.SpectralCache())
+    sizes = np.asarray(batch.sizes())
+    assert sizes.max() <= 3
+    assert sizes.mean() > 1.5              # strong kernel actually selects
+
+
+def test_rescale_edges_pin_the_achievable_range():
+    m = _model(N=10, r=4)
+    got = m.rescale(3.5, cache=dpp.SpectralCache())
+    assert type(got) is dpp.LowRank
+    np.testing.assert_allclose(got.expected_size(), 3.5, atol=1e-3)
+    for bad in (0.0, 4.0, 4.5):            # E|Y| lives strictly in (0, r)
+        with pytest.raises(ValueError, match="not achievable"):
+            m.rescale(bad)
+
+
+def test_condition_on_dependent_items_raises():
+    V = np.random.default_rng(0).normal(size=(6, 3))
+    V[1] = V[0]                            # duplicate item => P({0,1}) = 0
+    m = dpp.LowRank(jnp.asarray(V))
+    with pytest.raises(ValueError, match="singular"):
+        m.condition([0, 1])
+    cond = m.condition([2])                # regular conditioning stays lowrank
+    assert type(cond) is dpp.LowRank and cond.N == 5
+
+
+# ---------------------------------------------------------------------------
+# the zero-N×N-eigh guarantee
+# ---------------------------------------------------------------------------
+
+def test_hot_path_never_runs_an_nxn_eigh():
+    """N = 600 >> r = 8: the whole facade surface (spectrum, sampling,
+    log_prob, marginals, rescale) plus a q-only swap must cost exactly two
+    r×r eighs and nothing N-sized — pinned via the obs timer tags the
+    SpectralCache emits for every eigh it runs."""
+    N, r = 600, 8
+    tracker = obs.InMemoryTracker(keep_records=True)
+    cache = dpp.SpectralCache()
+    with obs.use(tracker):
+        m = _model(N=N, r=r, seed=3)
+        batch = m.sample(jax.random.PRNGKey(0), 32, cache=cache)
+        m.log_prob(batch, cache=cache)
+        m.marginal([0, 5], cache=cache)
+        m.rescale(4.0, cache=cache)
+        m2 = dpp.LowRank(m.V, m.q * 2.0)   # per-tenant q swap, shared V
+        m2.sample(jax.random.PRNGKey(1), 32, cache=cache)
+        m2.expected_size(cache=cache)
+    stats = cache.stats()
+    assert stats["misses"] == 2            # one dual eigh per (V, q) pair
+    assert stats["evictions"] == 0
+    eighs = [rec for rec in tracker.records
+             if rec["name"] == "spectral_cache.eigh_s"]
+    assert len(eighs) == 2
+    assert all(rec["tags"]["n"] == r for rec in eighs), eighs
+
+
+def test_kdpp_draws_exactly_k_through_the_dual_hook():
+    m = _model(N=20, r=5)
+    batch = m.sample(jax.random.PRNGKey(2), 100, k=3,
+                     cache=dpp.SpectralCache())
+    assert (np.asarray(batch.sizes()) == 3).all()
+    idx = np.asarray(batch.indices)
+    assert all(len(set(row.tolist())) == 3 for row in idx)
+
+
+def test_dual_sampler_rejects_fused_backends():
+    m = _model()
+    spec = m.spectrum(cache=dpp.SpectralCache())
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    with pytest.raises(ValueError, match="no fused"):
+        spec.sample_rows(keys, 3, backend="pallas")
+    with pytest.raises(ValueError, match="no fused"):
+        spec.sample_rows_kdpp(keys, 2, backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# the dual learner
+# ---------------------------------------------------------------------------
+
+def _training_setup(N=30, r=5, n_draws=192):
+    truth = _model(N=N, r=r, seed=11).rescale(r * 0.6,
+                                              cache=dpp.SpectralCache())
+    data = truth.sample(jax.random.PRNGKey(4), n_draws,
+                        cache=dpp.SpectralCache())
+    init = dpp.LowRank(
+        jax.random.normal(jax.random.PRNGKey(5), (N, r)) * 0.5)
+    return data, init
+
+
+def test_fit_ascends_and_returns_lowrank():
+    data, init = _training_setup()
+    rep = init.fit(data, iters=8)
+    assert type(rep.model) is dpp.LowRank
+    lls = rep.log_likelihoods
+    assert lls[-1] > lls[0]
+    assert all(b >= a - 1e-4 for a, b in zip(lls, lls[1:])), lls
+    assert rep.sweeps == 8 and rep.sweeps_per_sec > 0
+    # the fitted model is a full facade citizen
+    assert np.isfinite(float(rep.model.log_likelihood(data)))
+
+
+def test_fit_rejects_foreign_algorithms():
+    data, init = _training_setup(N=10, r=3, n_draws=8)
+    with pytest.raises(ValueError, match="lowrank"):
+        init.fit(data, algorithm="em")
+
+
+def test_fit_minibatch_and_feature_map_modes():
+    from repro.lowrank.learn import fit_lowrank
+    data, init = _training_setup()
+    rep = fit_lowrank(init, data, iters=4, minibatch_size=64)
+    assert rep.sweeps == 4 and type(rep.model) is dpp.LowRank
+    # feature-map mode: q = softplus(X w + b) learned jointly with V
+    X = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(6), (init.N, 4)))
+    rep2 = fit_lowrank(init, data, iters=5, item_features=X)
+    assert rep2.log_likelihoods[-1] >= rep2.log_likelihoods[0] - 1e-5
+    assert type(rep2.model) is dpp.LowRank
+    assert np.isfinite(float(rep2.model.log_likelihood(data)))
+
+
+def test_fit_emits_learning_telemetry():
+    data, init = _training_setup(N=12, r=3, n_draws=32)
+    tracker = obs.InMemoryTracker(keep_records=True)
+    with obs.use(tracker):
+        init.fit(data, iters=2)
+    names = {rec["name"] for rec in tracker.records}
+    assert "learning.sweeps" in names or "learning.sweep_s" in names, names
+
+
+# ---------------------------------------------------------------------------
+# serving: per-tenant q over one shared basis
+# ---------------------------------------------------------------------------
+
+def _tenant_models():
+    V = jax.random.normal(jax.random.PRNGKey(20), (64, 8))
+    qa = jnp.abs(jax.random.normal(jax.random.PRNGKey(21), (64,))) + 0.2
+    qb = jnp.abs(jax.random.normal(jax.random.PRNGKey(22), (64,))) + 0.2
+    return dpp.LowRank(V, qa), dpp.LowRank(V, qb)
+
+
+def _tenant_fleet(ma, mb, seed=0, cache=None):
+    from repro.serving import ServingConfig
+    return ma.serving(ServingConfig(max_batch=16, deadline_ms=2.0),
+                      tenant_models={"a": ma, "b": mb}, seed=seed,
+                      cache=cache)
+
+
+def test_serving_per_tenant_draws_are_order_invariant():
+    cache = dpp.SpectralCache()
+    ma, mb = _tenant_models()
+    svc = _tenant_fleet(ma, mb, cache=cache)
+    ra1 = svc.sample(3, tenant="a")
+    rb1 = svc.sample(3, tenant="b")
+    svc.close()
+    svc2 = _tenant_fleet(ma, mb, cache=cache)
+    rb2 = svc2.sample(3, tenant="b")       # reversed submit order
+    ra2 = svc2.sample(3, tenant="a")
+    svc2.close()
+    assert ra1 == ra2 and rb1 == rb2
+    assert ra1 != rb1                      # distinct kernels, distinct draws
+    # two tenants sharing V cost two r×r duals total, across BOTH services
+    assert cache.stats()["misses"] == 2
+
+
+def test_serving_unknown_tenant_contract():
+    from repro.serving import AsyncSamplingService, ServingConfig
+    V = jax.random.normal(jax.random.PRNGKey(23), (32, 4))
+    m = dpp.LowRank(V)
+    svc = AsyncSamplingService(
+        config=ServingConfig(max_batch=8, deadline_ms=2.0),
+        tenant_models={"a": m}, seed=0)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        svc.submit(1, tenant="nobody")     # no default model configured
+    assert len(svc.sample(2, tenant="a")) == 2
+    svc.close()
+    # with a default model, unnamed tenants fall back to it
+    svc2 = m.serving(tenant_models={"a": m}, seed=0)
+    assert len(svc2.sample(2, tenant="nobody")) == 2
+    svc2.close()
+
+
+def test_serving_mixed_tenants_coalesce_in_one_flush():
+    ma, mb = _tenant_models()
+    svc = _tenant_fleet(ma, mb)
+    ta = svc.submit(2, tenant="a")
+    tb = svc.submit(2, tenant="b")
+    assert len(ta.result(timeout=30.0)) == 2
+    assert len(tb.result(timeout=30.0)) == 2
+    svc.close()                            # drains + joins the flush thread
+    assert svc.stats.flushes >= 1
+    assert svc.stats.admitted == 2
+
+
+# ---------------------------------------------------------------------------
+# data pipeline: the low-rank selection route
+# ---------------------------------------------------------------------------
+
+def test_nystrom_full_rank_reproduces_the_exact_kernel():
+    X = np.random.default_rng(0).normal(size=(24, 5))
+    B = np.asarray(dpp.nystrom_features(X, rank=24, gamma=0.5))
+    d2 = ((X[:, None] - X[None, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(B @ B.T, np.exp(-0.5 * d2),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_rff_features_shape_and_psd():
+    X = np.random.default_rng(1).normal(size=(30, 4))
+    B = np.asarray(dpp.random_fourier_features(X, rank=16, gamma=0.3))
+    assert B.shape == (30, 16)
+    w = np.linalg.eigvalsh(B @ B.T)
+    assert w.min() > -1e-5                 # PSD by construction
+
+
+def test_selector_routes_by_size_and_method():
+    from repro.data.dpp_selection import DPPBatchSelector
+    X = np.random.default_rng(2).normal(size=(24, 6))
+    dense = DPPBatchSelector.from_features(X, 4, 6, method="dense")
+    low = DPPBatchSelector.from_features(X, 4, 6, method="lowrank", rank=8)
+    auto_small = DPPBatchSelector.from_features(X, 4, 6, method="auto")
+    auto_big = DPPBatchSelector.from_features(X, 4, 6, method="auto",
+                                              threshold=10)
+    assert type(dense.dpp) is dpp.Kron
+    assert type(low.dpp) is dpp.LowRank and low.dpp.rank == 8
+    assert type(auto_small.dpp) is dpp.Kron        # 24 <= default threshold
+    assert type(auto_big.dpp) is dpp.LowRank       # 24 > 10
+    with pytest.raises(ValueError, match="method"):
+        DPPBatchSelector.from_features(X, 4, 6, method="nope")
+    with pytest.raises(ValueError, match="features"):
+        DPPBatchSelector.from_features(X, 4, 6, method="lowrank",
+                                       features="nope")
+
+
+def test_selector_lowrank_selects_and_learns():
+    from repro.data.dpp_selection import DPPBatchSelector
+    X = np.random.default_rng(3).normal(size=(24, 6))
+    sel = DPPBatchSelector.from_features(X, 4, 6, method="lowrank",
+                                         rank=24)
+    rng = np.random.default_rng(0)
+    idx = sel.select(rng, 6)
+    assert len(idx) == 6 and len(set(idx.tolist())) == 6
+    assert (idx >= 0).all() and (idx < 24).all()
+    sel2 = sel.fit_from_subsets([[0, 5, 11], [2, 17], [3, 9, 20]], iters=2)
+    assert type(sel2.dpp) is dpp.LowRank
+    assert sel2.select(rng, 6).shape == (6,)
+
+
+def test_selector_lowrank_marginals_match_dense_reference():
+    """At small N the lowrank route with a full-rank Nyström basis is the
+    exact RBF-kernel DPP: its sampled singleton marginals must match the
+    dense marginal kernel of the kernel it factorizes."""
+    from repro.data.dpp_selection import DPPBatchSelector
+    X = np.random.default_rng(4).normal(size=(12, 3))
+    sel = DPPBatchSelector.from_features(X, 3, 4, method="lowrank", rank=12)
+    L = np.asarray(sel.dpp.dense_kernel())
+    K = np.asarray(marginal_kernel(L))
+    batch = sel.dpp.sample(jax.random.PRNGKey(0), 3000,
+                           cache=dpp.SpectralCache())
+    idx = np.asarray(batch.indices)
+    msk = np.asarray(batch.mask)
+    mem = np.zeros((batch.n, 12))
+    for i in range(batch.n):
+        mem[i, idx[i][msk[i]]] = 1.0
+    np.testing.assert_allclose(mem.mean(0), np.diag(K), atol=0.04)
